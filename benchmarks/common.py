@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def save(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    fn = os.path.join(RESULTS, f"{name}.json")
+    with open(fn, "w") as f:
+        json.dump(payload, f, indent=1)
+    return fn
+
+
+def load(name: str) -> Dict:
+    with open(os.path.join(RESULTS, f"{name}.json")) as f:
+        return json.load(f)

@@ -1,0 +1,48 @@
+"""Figures 11-12: monetary cost & power of scaling detection to Terabit line
+rates — server fleet vs Peregrine's switch+server split.
+
+Quantitative model mirroring §5.7 (constants from the cited literature /
+public list prices; worst-case switch power as the paper does):
+  * middlebox detector capacity: measured MD throughput mapped to the
+    paper's ~15 Gbps per-server ceiling (Whisper-class, kernel-bypass)
+  * server: $6,000, 500 W (dual-Xeon + 100G NIC, as §5.1's testbed)
+  * Tofino switch: $10,000, 450 W worst case — constant, line-rate FC
+  * Peregrine still needs ONE detection server per deployment (record
+    stream at 1:32768 fits a single box, §5.5)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save
+
+SERVER_COST, SERVER_W = 6000.0, 500.0
+SWITCH_COST, SWITCH_W = 10000.0, 450.0
+SERVER_GBPS = 15.0          # per-server detection ceiling (Whisper-class)
+
+LINE_RATES = (100, 400, 800, 1600, 3200, 6400)   # Gbps
+
+
+def main():
+    rows = []
+    for g in LINE_RATES:
+        n_srv = int(np.ceil(g / SERVER_GBPS))
+        fleet = {"servers": n_srv, "cost": n_srv * SERVER_COST,
+                 "power_w": n_srv * SERVER_W}
+        pereg = {"servers": 1, "cost": SWITCH_COST + SERVER_COST,
+                 "power_w": SWITCH_W + SERVER_W}
+        rows.append({"line_rate_gbps": g, "fleet": fleet, "peregrine": pereg,
+                     "cost_ratio": fleet["cost"] / pereg["cost"],
+                     "power_ratio": fleet["power_w"] / pereg["power_w"]})
+        print(f"{g:5d} Gbps  fleet: {n_srv:4d} srv ${fleet['cost']:9,.0f} "
+              f"{fleet['power_w'] / 1000:7.1f} kW | peregrine: "
+              f"${pereg['cost']:7,.0f} {pereg['power_w'] / 1000:4.2f} kW "
+              f"| {rows[-1]['cost_ratio']:5.1f}x cost {rows[-1]['power_ratio']:5.1f}x power")
+    save("cost_model", {"rows": rows, "constants": {
+        "server_cost": SERVER_COST, "server_w": SERVER_W,
+        "switch_cost": SWITCH_COST, "switch_w": SWITCH_W,
+        "server_gbps": SERVER_GBPS}})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Figures 1 & 7 (+ Appendix B Figures 14-15): detection performance across
+sampling rates — Peregrine (switch-mode FC, record sampling) vs the Kitsune
+baseline (packet sampling), all 15 attacks.
+
+Full run:  PYTHONPATH=src python -m benchmarks.detection_auc
+Quick run: ... --quick  (3 attacks, smaller traces — used by benchmarks.run)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.detection.sweep import sweep_attack
+from repro.traffic import ATTACKS, synth_trace
+
+FULL_RATES = (1, 64, 256, 1024)
+QUICK_RATES = (1, 256)
+
+
+def run(attacks, rates, n_train, n_eval, mode="switch", seed=0):
+    table = {}
+    for attack in attacks:
+        t0 = time.time()
+        data = synth_trace(attack, n_train=n_train,
+                           n_benign_eval=n_eval // 2,
+                           n_attack=n_eval // 2, seed=seed)
+        table[attack] = sweep_attack(data, rates, mode=mode, seed=seed)
+        p = {r: round(v["auc"], 3) for r, v in table[attack]["peregrine"].items()}
+        k = {r: round(v["auc"], 3) for r, v in table[attack]["kitsune"].items()}
+        print(f"{attack:18s} peregrine={p} kitsune={k} "
+              f"[{time.time() - t0:.0f}s]")
+    return table
+
+
+def summarize(table, rates):
+    """Paper-style headline: counts of attacks with AUC > 0.8 / < 0.5."""
+    out = {}
+    for system in ("peregrine", "kitsune"):
+        eff = sum(1 for a in table
+                  if min(table[a][system][r]["auc"] for r in rates
+                         if r > 1) > 0.8)
+        dead = sum(1 for a in table
+                   if min(table[a][system][r]["auc"] for r in rates
+                          if r > 1) < 0.5)
+        out[system] = {"auc>0.8_all_sampled_rates": eff,
+                       "auc<0.5_at_some_sampled_rate": dead,
+                       "n_attacks": len(table)}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--mode", default="switch", choices=("switch", "exact"))
+    args = ap.parse_args()
+    if args.quick:
+        attacks = ("syn_dos", "ssdp_flood", "mirai")
+        rates = QUICK_RATES
+        table = run(attacks, rates, n_train=8000, n_eval=12000,
+                    mode=args.mode)
+    else:
+        attacks = tuple(ATTACKS)
+        rates = FULL_RATES
+        table = run(attacks, rates, n_train=60000, n_eval=60000,
+                    mode=args.mode)
+    head = summarize(table, rates)
+    print("headline:", head)
+    save("detection_auc" + ("_quick" if args.quick else ""),
+         {"rates": rates, "mode": args.mode, "table": table,
+          "headline": head})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""§Perf hillclimb driver: lower a cell with a named variant, record the
+roofline terms, and append to the iteration log.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell kimi-k2-1t-a32b:train_4k \
+      --variant moe_local
+
+Variants:
+  baseline     — exactly the sweep configuration (re-lowered)
+  moe_local    — shard_map local MoE dispatch (flags.use_local_moe_dispatch)
+  serve_opt    — serving posture: no per-step FSDP, 2D expert sharding
+  moe_local+serve_opt
+"""
+import argparse
+import json
+import os
+import time
+
+from benchmarks.roofline import analyse
+from benchmarks.common import RESULTS
+
+PERF_DIR = os.path.join(RESULTS, "perf")
+
+
+def run(cell: str, variant: str, multi_pod: bool = False):
+    from repro.launch.dryrun import lower_cell
+    arch, shape = cell.split(":")
+    opts = dict(moe_local="moe_local" in variant,
+                serve_opt="serve_opt" in variant,
+                fsdp_experts_only="fsdp_eo" in variant)
+    import contextlib
+    from repro.distributed import flags as _flags
+    rm = None
+    for pol in ("none", "dots", "full"):
+        if f"remat_{pol}" in variant:
+            rm = pol
+    ctx = _flags.use_remat_override(rm) if rm else contextlib.nullcontext()
+    t0 = time.time()
+    with ctx:
+        rec = lower_cell(arch, shape, multi_pod, **opts)
+    rec["compile_seconds"] = time.time() - t0
+    rec["variant"] = variant
+    os.makedirs(PERF_DIR, exist_ok=True)
+    fn = os.path.join(PERF_DIR, f"{arch}__{shape}__{variant}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    a = analyse(rec)
+    print(json.dumps({k: a[k] for k in
+                      ("arch", "shape", "compute_s", "memory_s",
+                       "collective_s", "dominant", "useful_ratio",
+                       "roofline_fraction", "peak_mem_gib")}, indent=1))
+    print("collectives:", rec["hlo_collective_ops"])
+    print("coll bytes GiB:", {k: round(v / 2**30, 2)
+                              for k, v in rec["collective_bytes"].items()})
+    return rec, a
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run(args.cell, args.variant, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Figures 9-10: relative weight of Feature Computation vs ML Detection in
+the end-to-end pipeline, per attack — the justification for offloading FC.
+
+The paper finds FC > 50% of processing time for most attacks; offloading it
+to the switch then ~doubles detector throughput (Fig. 9).  We measure both
+stages on identical record streams and report the split + implied speedup.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import save, timeit
+from repro.core import init_state, process_parallel
+from repro.detection.kitnet import score_kitnet, train_kitnet
+from repro.traffic import ATTACKS, synth_trace, to_jnp
+
+
+def split_for(attack: str, n: int, seed: int = 0):
+    data = synth_trace(attack, n_train=n, n_benign_eval=n // 2,
+                       n_attack=n // 2, seed=seed)
+    st = init_state(8192)
+    pk_tr = to_jnp(data["train"])
+    pk_ev = to_jnp(data["eval"])
+    st, f_tr = process_parallel(st, pk_tr)
+    net = train_kitnet(np.asarray(f_tr)[:2000], seed=seed)
+
+    t_fc = timeit(lambda: jax.block_until_ready(
+        process_parallel(st, pk_ev)[1]), reps=3)
+    _, f_ev = process_parallel(st, pk_ev)
+    f_ev = np.asarray(f_ev)
+    t_md = timeit(lambda: score_kitnet(net, f_ev), reps=3)
+    fc_share = t_fc / (t_fc + t_md)
+    # Fig 9: offloading FC leaves only MD on the server -> speedup:
+    speedup = (t_fc + t_md) / t_md
+    return {"fc_s": t_fc, "md_s": t_md, "fc_share": fc_share,
+            "offload_speedup": speedup}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    attacks = ("syn_dos", "mirai", "ssdp_flood") if args.quick else tuple(ATTACKS)
+    n = 6000 if args.quick else 20000
+    out = {}
+    for a in attacks:
+        out[a] = split_for(a, n)
+        print(f"{a:18s} FC={out[a]['fc_share'] * 100:5.1f}%  "
+              f"offload speedup={out[a]['offload_speedup']:.2f}x")
+    share = np.mean([v["fc_share"] for v in out.values()])
+    spd = np.mean([v["offload_speedup"] for v in out.values()])
+    print(f"mean FC share {share * 100:.1f}% -> offload speedup {spd:.2f}x "
+          f"(paper: >50% and ~2x)")
+    save("pipeline_split", {"per_attack": out, "mean_fc_share": share,
+                            "mean_offload_speedup": spd})
+
+
+if __name__ == "__main__":
+    main()

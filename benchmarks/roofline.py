@@ -1,0 +1,142 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Per (arch x shape) cell on the single-pod 16x16 mesh (multi-pod recorded in
+§Dry-run, roofline is single-pod per the assignment):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw            [s]
+    collective term = collective_bytes_per_device / ICI_bw     [s]
+
+Sources: ``compiled.cost_analysis()`` (flops, bytes accessed — both are for
+the per-device partitioned module) and the post-SPMD HLO text parse
+(collective result-shape bytes per device) — see launch/dryrun.py.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (we charge one link's bandwidth per chip — conservative;
+a 2D-torus chip has more links, so the collective term is an upper bound).
+
+MODEL_FLOPS = 6·N·D (train, fwd+bwd) or 2·N·D (inference), with N = active
+params for MoE.  MODEL_FLOPS/HLO_FLOPs exposes remat recompute and
+TP-replication waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    """Analytic 6ND / 2ND per device for the cell."""
+    from repro.configs import SHAPES, get_arch
+    shape = SHAPES[rec["shape"]]
+    n_active = rec["active_params"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence per step
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * n_active * tokens / rec["n_devices"]
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    cost = rec.get("cost_analysis", {})
+    flops = cost.get("flops", 0.0)
+    mem_bytes = cost.get("bytes accessed", 0.0)
+    coll = rec.get("collective_bytes", {}).get("total", 0)
+    t_c = flops / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_n = coll / ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    bound = max(t_c, t_m, t_n)
+    # roofline fraction: useful-FLOPs time at peak vs the binding term
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dom.replace("_s", ""),
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": round(mf / flops, 3) if flops else None,
+        "roofline_fraction": round(frac, 4),
+        "collective_ops": rec.get("hlo_collective_ops", {}),
+        "peak_mem_gib": round(rec.get("memory_analysis", {}).get(
+            "peak_memory_in_bytes", 0) / 2**30, 2),
+        "suggestion": _suggest(dom, rec),
+    }
+
+
+def _suggest(dom: str, rec: Dict) -> str:
+    arch, shape = rec["arch"], rec["shape"]
+    if dom == "collective_s":
+        ops = rec.get("hlo_collective_ops", {})
+        if ops.get("all-gather", 0) > 50:
+            return ("FSDP all-gathers dominate: overlap gathers with layer "
+                    "compute and/or reduce-scatter grads instead of "
+                    "all-reduce+slice")
+        return ("shrink TP collective payloads: fuse psums across the "
+                "attn+MLP pair or switch batch to more DP / less TP")
+    if dom == "memory_s":
+        if "decode" in shape or "500k" in shape:
+            return ("decode is KV-bandwidth-bound by nature: quantise the "
+                    "KV cache (int8) or widen batch to amortise weight reads")
+        return ("increase arithmetic intensity: larger per-device batch, "
+                "fuse elementwise chains, bf16 activations")
+    return ("compute-bound — already in the MXU regime; cut redundant "
+            "recompute (remat policy) or TP-replicated attention")
+
+
+def load_records(pattern: str = "*__singlepod.json") -> List[Dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN, pattern))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                 f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                 f"**{r['dominant']}** | {r['useful_ratio']} | "
+                 f"{r['roofline_fraction']:.3f} | {r['peak_mem_gib']} |\n")
+    return hdr + body
+
+
+def main():
+    rows = [a for a in (analyse(r) for r in load_records()) if a]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(markdown_table(rows))
+    # flag the three hillclimb candidates
+    ranked = sorted(rows, key=lambda r: r["roofline_fraction"])
+    coll = sorted(rows, key=lambda r: -r["collective_s"])
+    print("\nworst roofline fraction:",
+          [(r["arch"], r["shape"], r["roofline_fraction"]) for r in ranked[:3]])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"], round(r["collective_s"], 3))
+           for r in coll[:3]])
+
+
+if __name__ == "__main__":
+    main()

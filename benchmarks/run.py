@@ -1,0 +1,114 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+bench's core measured operation; derived = the headline metric it produces).
+
+Full-size variants of each bench are runnable standalone, e.g.
+  PYTHONPATH=src python -m benchmarks.detection_auc          (Fig 7, full)
+  PYTHONPATH=src python -m benchmarks.roofline               (§Roofline)
+"""
+from __future__ import annotations
+
+import contextlib
+import io
+import sys
+import time
+
+
+def _bench(name, fn):
+    t0 = time.perf_counter()
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        derived = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived}")
+    return buf.getvalue()
+
+
+def bench_detection_auc():
+    """Fig 1/7 + Fig 14/15 (quick subset)."""
+    from benchmarks.detection_auc import QUICK_RATES, run, summarize
+    table = run(("syn_dos", "ssdp_flood", "mirai"), QUICK_RATES,
+                n_train=8000, n_eval=12000, mode="switch")
+    head = summarize(table, QUICK_RATES)
+    p = head["peregrine"]["auc>0.8_all_sampled_rates"]
+    k = head["kitsune"]["auc>0.8_all_sampled_rates"]
+    return f"peregrine_effective={p}/3;kitsune_effective={k}/3"
+
+
+def bench_throughput():
+    """Fig 8."""
+    from benchmarks.throughput import fc_rates, md_rate
+    fc = fc_rates(n_pkts=8000)
+    md = md_rate(n_train=2000, n_score=4096)
+    return (f"fc_parallel_pps={fc['parallel_pps']:.0f};"
+            f"md_rps={md:.0f}")
+
+
+def bench_pipeline_split():
+    """Fig 9/10."""
+    from benchmarks.pipeline_split import split_for
+    r = split_for("syn_dos", 6000)
+    return (f"fc_share={r['fc_share'] * 100:.0f}%;"
+            f"offload_speedup={r['offload_speedup']:.2f}x")
+
+
+def bench_resource_usage():
+    """Table 3."""
+    from benchmarks.resource_usage import state_bytes
+    r = state_bytes(65536)
+    return f"state_bytes_64k_slots={r['total_bytes']}"
+
+
+def bench_cost_model():
+    """Fig 11/12."""
+    from benchmarks.cost_model import SERVER_COST, SERVER_GBPS, SERVER_W, \
+        SWITCH_COST, SWITCH_W
+    import numpy as np
+    g = 6400
+    n = int(np.ceil(g / SERVER_GBPS))
+    ratio = n * SERVER_COST / (SWITCH_COST + SERVER_COST)
+    return f"cost_ratio_at_6.4T={ratio:.0f}x"
+
+
+def bench_approx_ablation():
+    """§5.4 approximation ablation (single attack)."""
+    from repro.detection.sweep import sweep_attack
+    from repro.traffic import synth_trace
+    data = synth_trace("ssdp_flood", n_train=6000, n_benign_eval=3000,
+                       n_attack=3000, seed=11)
+    ex = sweep_attack(data, [64], mode="exact")["peregrine"][64]["auc"]
+    sw = sweep_attack(data, [64], mode="switch")["peregrine"][64]["auc"]
+    return f"auc_exact={ex:.3f};auc_switch={sw:.3f}"
+
+
+def bench_roofline():
+    """§Roofline from the dry-run artifacts (if present)."""
+    from benchmarks.roofline import analyse, load_records
+    recs = load_records()
+    if not recs:
+        return "no_dryrun_artifacts(run repro.launch.dryrun)"
+    rows = [a for a in (analyse(r) for r in recs) if a]
+    import os, json
+    from benchmarks.common import RESULTS
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return f"cells={len(rows)};dominant={dom}"
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    _bench("detection_auc_fig7", bench_detection_auc)
+    _bench("throughput_fig8", bench_throughput)
+    _bench("pipeline_split_fig9_10", bench_pipeline_split)
+    _bench("resource_usage_table3", bench_resource_usage)
+    _bench("cost_model_fig11_12", bench_cost_model)
+    _bench("approx_ablation_s54", bench_approx_ablation)
+    _bench("roofline_terms", bench_roofline)
+
+
+if __name__ == '__main__':
+    main()

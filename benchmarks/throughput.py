@@ -1,0 +1,91 @@
+"""Figure 8 analog: system throughput vs sampling rate.
+
+The paper measures 100G-link packet rates against the ML classifier's
+record-processing rate, binary-searching the highest stable rate.  Offline
+(CPU-only) we measure the two component rates directly and derive the same
+curve:
+
+    stable_pps(rate) = min(FC_pps, MD_records_per_s * rate)
+
+FC_pps is measured for three backends: the serial switch-semantics oracle,
+the TPU-native segmented-scan pipeline, and the Pallas feature_update kernel
+(interpret mode; on-TPU this is the line-rate path).  The TPU projection for
+the parallel pipeline is derived from its roofline bytes (see EXPERIMENTS.md
+§Perf — Peregrine pipeline).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, timeit
+from repro.core import init_state, process_parallel, process_serial
+from repro.detection.kitnet import score_kitnet, train_kitnet
+from repro.kernels import ops
+from repro.traffic import synth_trace, to_jnp
+from repro.core.state import packet_slots
+
+
+def fc_rates(n_pkts: int = 20000, n_slots: int = 8192):
+    data = synth_trace("mirai", n_train=n_pkts, n_benign_eval=1000,
+                       n_attack=1000, seed=0)
+    pk = to_jnp(data["train"])
+    st = init_state(n_slots)
+
+    t_par = timeit(lambda: jax.block_until_ready(
+        process_parallel(st, pk)[1]), reps=3)
+    par_pps = n_pkts / t_par
+
+    n_serial = 2000
+    pk_s = {k: v[:n_serial] for k, v in pk.items()}
+    t_ser = timeit(lambda: jax.block_until_ready(
+        process_serial(st, pk_s, mode="switch")[1]), reps=1)
+    ser_pps = n_serial / t_ser
+
+    # Pallas kernel (single key-type stream update), interpret mode
+    slots = packet_slots(pk, n_slots)["src_ip"]
+    table = {f: (jnp.zeros((n_slots, 4)) - (1.0 if f == "last_t" else 0.0))
+             for f in ("last_t", "w", "ls", "ss")}
+    n_kern = 4096
+    t_kern = timeit(lambda: jax.block_until_ready(ops.feature_update(
+        table, slots[:n_kern], pk["ts"][:n_kern], pk["length"][:n_kern],
+        chunk=512)[1]), reps=1)
+    kern_pps = n_kern / t_kern
+    return {"parallel_pps": par_pps, "serial_pps": ser_pps,
+            "pallas_interpret_pps": kern_pps}
+
+
+def md_rate(n_train: int = 4000, n_score: int = 8192):
+    rng = np.random.default_rng(0)
+    feats = rng.random((n_train, 80)).astype(np.float32)
+    net = train_kitnet(feats, seed=0)
+    batch = rng.random((n_score, 80)).astype(np.float32)
+    t = timeit(lambda: score_kitnet(net, batch), reps=3)
+    return n_score / t
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    n = 8000 if args.quick else 40000
+    fc = fc_rates(n_pkts=n)
+    md = md_rate()
+    rates = (1, 64, 1024, 32768)
+    curve = {r: min(fc["parallel_pps"], md * r) for r in rates}
+    out = {**fc, "md_records_per_s": md,
+           "stable_pps_at_rate": curve,
+           "note": "on-CPU single-core; Fig8 shape: throughput rises with "
+                   "sampling rate until FC-bound"}
+    for k, v in out.items():
+        if isinstance(v, float):
+            print(f"{k:26s} {v:12.0f}")
+    print("stable pps:", {r: int(v) for r, v in curve.items()})
+    save("throughput", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: the whole Peregrine loop in ~40 lines.
+
+Synthesises a Mirai-style trace, trains the detector on the benign prefix,
+then streams the attack window through the data-plane feature pipeline and
+scores per-epoch records — §3.2's workflow end to end.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.detection.metrics import auc
+from repro.data import phv_batches
+from repro.serving import DetectionService
+from repro.traffic import synth_trace
+
+# 1. a trace: benign training prefix + eval window with the attack mixed in
+data = synth_trace("mirai", n_train=12000, n_benign_eval=6000,
+                   n_attack=6000, seed=0)
+
+# 2. the detector: per-packet FC in the (TPU) data plane, one feature record
+#    every 256 packets to the KitNET classifier — sampling AFTER features.
+svc = DetectionService(epoch=256, n_slots=8192, mode="exact")
+
+# 3. training phase: benign traffic only (first 1M packets in the paper)
+for chunk in phv_batches(data["train"], 4096):
+    svc.observe_benign(chunk)
+svc.fit(fpr=0.01)
+print(f"trained; alarm threshold RMSE={svc.threshold:.4f}")
+
+# 4. detection phase: stream the eval window
+scores, labels, alarms = [], [], 0
+for chunk in phv_batches(data["eval"], 4096):
+    idx, s, al = svc.process(chunk)
+    scores.append(s)
+    labels.append(chunk["label"][idx])
+    alarms += int(al.sum())
+
+scores = np.concatenate(scores)
+labels = np.concatenate(labels)
+print(f"{len(scores)} records scored, {alarms} alarms")
+print(f"attack-record AUC = {auc(scores, labels):.3f}  "
+      f"(paper: >0.8 for 13/15 attacks)")

@@ -1,0 +1,43 @@
+"""Serve a small LM with batched requests through the continuous-batching
+engine (the decode path the decode_32k dry-run cells lower).
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 6 --slots 3
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import build_model
+from repro.serving.engine import Request, ServeEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma2-2b")
+ap.add_argument("--slots", type=int, default=3)
+ap.add_argument("--requests", type=int, default=6)
+ap.add_argument("--max-new", type=int, default=12)
+args = ap.parse_args()
+
+cfg = reduced(get_arch(args.arch))
+model = build_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+engine = ServeEngine(model, params, batch_slots=args.slots, max_seq=128)
+
+rng = np.random.default_rng(0)
+for rid in range(args.requests):
+    engine.submit(Request(
+        rid=rid,
+        prompt=jnp.asarray(rng.integers(1, cfg.vocab, 16), jnp.int32),
+        max_new=args.max_new))
+
+t0 = time.time()
+outputs = engine.run()
+dt = time.time() - t0
+total = sum(len(v) for v in outputs.values())
+for rid in sorted(outputs):
+    print(f"request {rid}: {outputs[rid]}")
+print(f"{len(outputs)} requests, {total} tokens, {total / dt:.1f} tok/s "
+      f"(CPU, {args.slots} slots)")

@@ -1,0 +1,12 @@
+"""Peregrine core: per-packet feature computation in a fast data plane,
+per-epoch feature-record sampling feeding ML detection (the paper's primary
+contribution, adapted to TPU — see DESIGN.md §2)."""
+from repro.core.state import (  # noqa: F401
+    init_state, state_slots, packet_slots, N_FEATURES, FEATURE_NAMES,
+    LAMBDAS, N_DECAY,
+)
+from repro.core.pipeline import process_serial  # noqa: F401
+from repro.core.parallel import process_parallel  # noqa: F401
+from repro.core.records import (  # noqa: F401
+    epoch_sample, epoch_indices, packet_sample_indices,
+)

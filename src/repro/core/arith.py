@@ -1,0 +1,118 @@
+"""Approximate-arithmetic model of the Tofino data plane (§4 of the paper).
+
+The switch has no multiply/divide/sqrt. Peregrine approximates:
+  * mul/div      -> round one operand to the nearest power of two, then shift
+                    (ternary-match tables select the shift amount);
+  * sqrt/square  -> Tofino "math unit": a 16-entry lookup on the operand's
+                    top mantissa bits + exponent scaling (low-precision).
+
+We reproduce those *semantics* in vectorised jnp so the detection-performance
+claims (incl. the approximation-as-regularizer conjecture, §5.4) can be
+evaluated; ``mode="exact"`` bypasses all of it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _ilog2(x: jax.Array) -> jax.Array:
+    """floor(log2 x) for x>0 (f32), elementwise."""
+    return jnp.floor(jnp.log2(jnp.maximum(x, _EPS)))
+
+
+def shift_div(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a / b with b rounded to the nearest upper power of two (right shift).
+
+    Integer semantics: the switch divides 32-bit counters; a divisor that
+    truncates to 0 yields 0, and the shifted result is floored.
+    """
+    e = jnp.ceil(jnp.log2(jnp.maximum(b, _EPS)))
+    out = jnp.floor(a * jnp.exp2(-e))
+    return jnp.where(b >= 1.0, out, 0.0)
+
+
+def shift_mul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a * b with b rounded to the nearest power of two (left shift)."""
+    e = jnp.round(jnp.log2(jnp.maximum(b, _EPS)))
+    out = jnp.floor(a * jnp.exp2(e))
+    return jnp.where(b >= 1.0, out, 0.0)
+
+
+# --- Tofino math-unit model: 16-entry LUT over mantissa, exponent rescale ---
+_LUT_N = 16
+
+
+def _mathunit(x: jax.Array, fn) -> jax.Array:
+    """Apply fn via exponent/mantissa decomposition with a 16-entry LUT.
+
+    x = m * 2^e with m in [1, 2); LUT indexes floor((m-1)*16).
+    Result = fn(lut_m) * fn(2^e) — an 8-bit-precision approximation like the
+    TNA math unit.
+    """
+    x = jnp.maximum(x, 0.0)
+    e = _ilog2(jnp.maximum(x, _EPS))
+    m = x * jnp.exp2(-e)                            # [1, 2)
+    idx = jnp.clip((m - 1.0) * _LUT_N, 0, _LUT_N - 1).astype(jnp.int32)
+    centers = 1.0 + (jnp.arange(_LUT_N, dtype=jnp.float32) + 0.5) / _LUT_N
+    lut = fn(centers)
+    out = jnp.floor(lut[idx] * fn(jnp.exp2(e)))
+    return jnp.where(x >= 1.0, out, 0.0)
+
+
+def mathunit_sqrt(x: jax.Array) -> jax.Array:
+    # fn(2^e) must be exact for the exponent part: sqrt(2^e) = 2^(e/2)
+    x = jnp.maximum(x, 0.0)
+    e = _ilog2(jnp.maximum(x, _EPS))
+    e_even = 2.0 * jnp.floor(e / 2.0)               # even exponent split
+    m = x * jnp.exp2(-e_even)                       # [1, 4)
+    idx = jnp.clip((m - 1.0) / 3.0 * _LUT_N, 0, _LUT_N - 1).astype(jnp.int32)
+    centers = 1.0 + (jnp.arange(_LUT_N, dtype=jnp.float32) + 0.5) * (3.0 / _LUT_N)
+    lut = jnp.sqrt(centers)
+    out = jnp.floor(lut[idx] * jnp.exp2(e_even / 2.0))
+    return jnp.where(x >= 1.0, out, 0.0)
+
+
+def mathunit_square(x: jax.Array) -> jax.Array:
+    return _mathunit(x, lambda v: v * v)
+
+
+def quantized_decay(lam: float, dt: jax.Array) -> jax.Array:
+    """Switch decay: 2^(-floor(lam*dt)) — iterated halvings (right shifts).
+
+    dt below the decay window (lam*dt < 1) applies no decay, matching the
+    interval check in §4 ("Handling Multiple Decay Factors").
+    """
+    k = jnp.clip(jnp.floor(lam * jnp.maximum(dt, 0.0)), 0.0, 31.0)
+    return jnp.exp2(-k)
+
+
+def exact_decay(lam: float, dt: jax.Array) -> jax.Array:
+    """delta = 2^(-lam*dt)  (Equation 1)."""
+    return jnp.exp2(-lam * jnp.maximum(dt, 0.0))
+
+
+def div(a, b, mode: str):
+    if mode == "switch":
+        return shift_div(a, b)
+    return jnp.where(b > 0, a / jnp.maximum(b, _EPS), 0.0)
+
+
+def sqrt(x, mode: str):
+    if mode == "switch":
+        return mathunit_sqrt(x)
+    return jnp.sqrt(jnp.maximum(x, 0.0))
+
+
+def square(x, mode: str):
+    if mode == "switch":
+        return mathunit_square(x)
+    return x * x
+
+
+def decay(lam: float, dt: jax.Array, mode: str):
+    if mode == "switch":
+        return quantized_decay(lam, dt)
+    return exact_decay(lam, dt)

@@ -1,0 +1,309 @@
+"""TPU-native Peregrine feature computation: segmented associative scans.
+
+The switch updates flow state one packet at a time.  On TPU we exploit that
+the decayed-atom update  A_i = delta_i * A_{i-1} + x_i  is a *linear
+first-order recurrence*, hence associative:
+
+    (s2, a2) o (s1, a1) = (s1*s2, a1*s2 + a2)
+
+so a whole packet batch is processed in O(log n) depth with
+``jax.lax.associative_scan``, *segmented by flow* (sort by stream id, stable,
+which preserves time order inside each stream).  Cross-direction state
+(stale opposite-direction statistics, last-residual for SR) uses a segmented
+"latest-value" scan, which is also associative.
+
+Semantics are bit-for-bit the serial oracle's ``exact`` mode (tested to
+float tolerance); the round-robin ``switch`` mode is inherently per-packet
+serial and stays on the oracle path.
+
+Requires ``pkts["ts"]`` sorted ascending (streams are time-ordered).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arith
+from repro.core.state import (
+    LAMBDAS, N_BI, N_DECAY, N_UNI, packet_slots,
+)
+
+_LAM = jnp.asarray(LAMBDAS, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# segmented-scan primitives
+# ---------------------------------------------------------------------------
+def seg_linear_scan(seg_start, delta, x):
+    """Segmented A_i = delta_i * A_{i-1} + x_i (A resets at segment starts).
+
+    seg_start: (n,) bool; delta, x: (n, ...) broadcastable. Returns A (n, ...).
+    """
+    f = seg_start
+    while f.ndim < delta.ndim:
+        f = f[..., None]
+    f = jnp.broadcast_to(f, delta.shape)
+
+    def combine(l, r):
+        fl, sl, al = l
+        fr, sr, ar = r
+        return (fl | fr,
+                jnp.where(fr, sr, sl * sr),
+                jnp.where(fr, ar, al * sr + ar))
+
+    _, _, a = jax.lax.associative_scan(combine, (f, delta, x), axis=0)
+    return a
+
+
+def seg_last_scan(seg_start, valid, value):
+    """Segmented latest-valid-value (inclusive). Returns (found, last_value).
+
+    ``found[i]`` False means no valid element yet in i's segment.
+    """
+    f = seg_start
+    v = valid
+    while f.ndim < value.ndim:
+        f = f[..., None]
+        v = v[..., None]
+    f = jnp.broadcast_to(f, value.shape)
+    v = jnp.broadcast_to(v, value.shape)
+
+    def combine(l, r):
+        fl, vl, xl = l
+        fr, vr, xr = r
+        found = jnp.where(fr, vr, vl | vr)
+        val = jnp.where(fr, jnp.where(vr, xr, xr * 0), jnp.where(vr, xr, xl))
+        return (fl | fr, found, val)
+
+    _, found, val = jax.lax.associative_scan(combine, (f, v, value), axis=0)
+    return found, val
+
+
+def _segments(sorted_ids):
+    n = sorted_ids.shape[0]
+    start = jnp.concatenate([jnp.ones((1,), bool),
+                             sorted_ids[1:] != sorted_ids[:-1]])
+    end = jnp.concatenate([sorted_ids[1:] != sorted_ids[:-1],
+                           jnp.ones((1,), bool)])
+    return start, end
+
+
+# ---------------------------------------------------------------------------
+# one directional stream table pass
+# ---------------------------------------------------------------------------
+def stream_pass(tab, stream_ids, ts, lens, n_streams):
+    """Vectorised decayed-atom update for one table of streams.
+
+    tab: {"last_t","w","ls","ss"} each (n_streams, N_DECAY).
+    stream_ids/ts/lens: (n,). Returns (per-packet atoms dict in ORIGINAL
+    order, updated table).
+    """
+    n = stream_ids.shape[0]
+    order = jnp.argsort(stream_ids, stable=True)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(n))
+    sid = stream_ids[order]
+    t = ts[order]
+    x = lens[order]
+    start, end = _segments(sid)
+
+    # per-packet decay: dt to previous packet in stream (table last_t at start)
+    t_prev_in = jnp.concatenate([t[:1], t[:-1]])
+    last_t_tab = tab["last_t"][sid]                       # (n, N_DECAY)
+    fresh = last_t_tab < 0.0
+    dt = jnp.where(start[:, None],
+                   jnp.where(fresh, 0.0, t[:, None] - last_t_tab),
+                   (t - t_prev_in)[:, None])
+    dt = jnp.maximum(dt, 0.0)
+    delta = jnp.exp2(-_LAM[None, :] * dt)
+    delta = jnp.where(start[:, None] & fresh, 0.0, delta)
+
+    def scan_atom(x_inc):
+        """x_inc: (n, N_DECAY) per-packet increment."""
+        return seg_linear_scan(start, delta, x_inc)
+
+    # fold table carry into the first element: A_1 = delta_1*A_tab + x_1
+    def with_carry(tab_a, x_inc):
+        x0 = jnp.where(start[:, None], x_inc + delta * tab_a[sid], x_inc)
+        return scan_atom(x0)
+
+    ones = jnp.ones((n, N_DECAY))
+    w = with_carry(tab["w"], ones)
+    ls = with_carry(tab["ls"], jnp.broadcast_to(x[:, None], (n, N_DECAY)))
+    ss = with_carry(tab["ss"], jnp.broadcast_to((x ** 2)[:, None], (n, N_DECAY)))
+
+    # store back last element of each segment (indices unique by construction)
+    sid_end = jnp.where(end, sid, n_streams)              # OOB drops
+    new_tab = {
+        "last_t": tab["last_t"].at[sid_end].set(
+            jnp.broadcast_to(t[:, None], (n, N_DECAY)), mode="drop"),
+        "w": tab["w"].at[sid_end].set(w, mode="drop"),
+        "ls": tab["ls"].at[sid_end].set(ls, mode="drop"),
+        "ss": tab["ss"].at[sid_end].set(ss, mode="drop"),
+    }
+    atoms = {"w": w[inv], "ls": ls[inv], "ss": ss[inv]}
+    return atoms, new_tab
+
+
+def _stats(w, ls, ss):
+    mu = jnp.where(w > 0, ls / jnp.maximum(w, 1e-12), 0.0)
+    ex2 = jnp.where(w > 0, ss / jnp.maximum(w, 1e-12), 0.0)
+    var = jnp.abs(ex2 - mu ** 2)
+    return mu, var, jnp.sqrt(var)
+
+
+# ---------------------------------------------------------------------------
+# channel pass: stale opposite stats + SR recurrence
+# ---------------------------------------------------------------------------
+def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots):
+    """Cross-direction state for ONE bi key type.
+
+    bi_k: the per-key-type slices of the bi table (each (n_slots, ...)).
+    own_atoms: per-packet post-update atoms of the packet's own direction
+    (original order, (n, N_DECAY) each).
+    Returns (features pieces, updated bi_k).
+    """
+    n = slots.shape[0]
+    order = jnp.argsort(slots, stable=True)
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(n))
+    sid = slots[order]
+    d = dirs[order]
+    t = ts[order]
+    start, end = _segments(sid)
+
+    own_w = own_atoms["w"][order]
+    own_ls = own_atoms["ls"][order]
+    own_ss = own_atoms["ss"][order]
+
+    # --- stale opposite-direction atoms: latest same-channel opposite pkt ---
+    def latest_dir(X, tab_val):
+        valid = d == X
+        stacked = jnp.stack([own_w, own_ls, own_ss], axis=-1)  # (n,ND,3)
+        found, val = seg_last_scan(start, valid, stacked)
+        fallback = tab_val[sid]                                # (n,ND,3)
+        return jnp.where(found, val, fallback)
+
+    tabv = jnp.stack([bi_k["w"], bi_k["ls"], bi_k["ss"]], axis=-1)  # (ns,2,ND,3)
+    v0 = latest_dir(0, tabv[:, 0])
+    v1 = latest_dir(1, tabv[:, 1])
+    opp = jnp.where((d == 0)[:, None, None], v1, v0)          # (n,ND,3)
+    opp_w, opp_ls, opp_ss = opp[..., 0], opp[..., 1], opp[..., 2]
+
+    # --- residuals ---
+    mu_own, var_own, sig_own = _stats(own_w, own_ls, own_ss)
+    lens_s = lens[order]
+    r = lens_s[:, None] - mu_own                              # (n, ND)
+
+    def latest_res(X, tab_res):
+        valid = d == X
+        found, val = seg_last_scan(start, valid, r)
+        return jnp.where(found, val, tab_res[sid])
+
+    r0 = latest_res(0, bi_k["res_last"][:, 0])
+    r1 = latest_res(1, bi_k["res_last"][:, 1])
+    r_opp = jnp.where((d == 0)[:, None], r1, r0)
+
+    # --- SR recurrence over the whole channel (both directions) ---
+    t_prev = jnp.concatenate([t[:1], t[:-1]])
+    sr_lt_tab = bi_k["sr_last_t"][sid]                        # (n, ND)
+    fresh = sr_lt_tab < 0.0
+    dt = jnp.where(start[:, None],
+                   jnp.where(fresh, 0.0, t[:, None] - sr_lt_tab),
+                   (t - t_prev)[:, None])
+    dsr = jnp.exp2(-_LAM[None, :] * jnp.maximum(dt, 0.0))
+    dsr = jnp.where(start[:, None] & fresh, 0.0, dsr)
+    x_sr = r * r_opp
+    x_sr = jnp.where(start[:, None], x_sr + dsr * bi_k["sr"][sid], x_sr)
+    sr = seg_linear_scan(start, dsr, x_sr)
+
+    # --- bidirectional stats ---
+    mu_opp, var_opp, sig_opp = _stats(opp_w, opp_ls, opp_ss)
+    mag = jnp.sqrt(mu_own ** 2 + mu_opp ** 2)
+    rad = jnp.sqrt(var_own ** 2 + var_opp ** 2)
+    wsum = own_w + opp_w
+    cov = jnp.where(wsum > 0, sr / jnp.maximum(wsum, 1e-12), 0.0)
+    sden = sig_own * sig_opp
+    pcc = jnp.where(sden > 0, cov / jnp.maximum(sden, 1e-12), 0.0)
+
+    feats = jnp.stack([own_w, mu_own, sig_own, mag, rad, cov, pcc],
+                      axis=-1)                                 # (n, ND, 7)
+    feats = feats[inv]
+
+    # --- store-back (segment ends; res_last per direction: last of each) ---
+    sid_end = jnp.where(end, sid, n_slots)
+    new_bi = dict(bi_k)
+    new_bi["sr"] = bi_k["sr"].at[sid_end].set(sr, mode="drop")
+    new_bi["sr_last_t"] = bi_k["sr_last_t"].at[sid_end].set(
+        jnp.broadcast_to(t[:, None], sr.shape), mode="drop")
+    # last residual of each (channel, direction): last occurrence of the
+    # composite key sid*2+d (unique per (segment, dir) since segments are
+    # channel-contiguous) — resort by that key, take segment ends.
+    key2 = sid * 2 + d
+    o2 = jnp.argsort(key2, stable=True)
+    k2s = key2[o2]
+    _, end2 = _segments(k2s)
+    sid2_end = jnp.where(end2, k2s // 2, n_slots)
+    d2 = k2s % 2
+    new_bi["res_last"] = new_bi["res_last"].at[sid2_end, d2].set(
+        r[o2], mode="drop")
+    return feats, new_bi
+
+
+@jax.jit
+def process_parallel(state: Dict, pkts: Dict[str, jax.Array]
+                     ) -> Tuple[Dict, jax.Array]:
+    """Exact-mode Peregrine FC via segmented scans. Same I/O as
+    ``process_serial(..., mode="exact")``."""
+    from repro.core.state import state_slots
+    n_slots = state_slots(state)
+    sl = packet_slots(pkts, n_slots)
+    ts = pkts["ts"].astype(jnp.float32)
+    lens = pkts["length"].astype(jnp.float32)
+    feats = []
+
+    # ---- unidirectional ----
+    new_uni = {k: state["uni"][k] for k in state["uni"]}
+    for ki, key in enumerate(("src_mac_ip", "src_ip")):
+        tab = {f: state["uni"][f][ki] for f in ("last_t", "w", "ls", "ss")}
+        atoms, new_tab = stream_pass(tab, sl[key], ts, lens, n_slots)
+        mu, var, sig = _stats(atoms["w"], atoms["ls"], atoms["ss"])
+        feats.append(jnp.stack([atoms["w"], mu, sig], axis=-1))  # (n,ND,3)
+        for f in new_tab:
+            new_uni[f] = new_uni[f].at[ki].set(new_tab[f])
+
+    # ---- bidirectional ----
+    new_bi = {k: state["bi"][k] for k in state["bi"]}
+    bi_feats = []
+    for ki, key in enumerate(("channel", "socket")):
+        # directional streams: stream id = slot*2 + dir
+        stream_ids = sl[key] * 2 + sl["dir"]
+        tab = {f: state["bi"][f][ki].reshape(2 * n_slots, N_DECAY)
+               for f in ("last_t", "w", "ls", "ss")}
+        # note: table layout (n_slots, 2, ND) -> stream id slot*2+dir matches
+        atoms, new_tab = stream_pass(tab, stream_ids, ts, lens, 2 * n_slots)
+        bi_k = {f: state["bi"][f][ki] for f in
+                ("sr", "sr_last_t", "res_last")}
+        bi_k["w"] = new_tab["w"].reshape(n_slots, 2, N_DECAY)
+        bi_k["ls"] = new_tab["ls"].reshape(n_slots, 2, N_DECAY)
+        bi_k["ss"] = new_tab["ss"].reshape(n_slots, 2, N_DECAY)
+        # stale-opposite fallback must be the PRE-batch table values:
+        bi_k_pre = dict(bi_k)
+        for f in ("w", "ls", "ss"):
+            bi_k_pre[f] = state["bi"][f][ki]
+        fts, upd = channel_pass(bi_k_pre, sl[key], sl["dir"], ts, lens,
+                                atoms, n_slots)
+        bi_feats.append(fts)
+        for f in ("last_t", "w", "ls", "ss"):
+            new_bi[f] = new_bi[f].at[ki].set(
+                new_tab[f].reshape(n_slots, 2, N_DECAY))
+        for f in ("sr", "sr_last_t", "res_last"):
+            new_bi[f] = new_bi[f].at[ki].set(upd[f])
+
+    n = ts.shape[0]
+    out = jnp.concatenate(
+        [f.reshape(n, -1) for f in feats] +
+        [f.reshape(n, -1) for f in bi_feats], axis=-1)
+    new_state = {"uni": new_uni, "bi": new_bi}
+    return new_state, out

@@ -1,0 +1,175 @@
+"""Peregrine feature-computation pipeline — serial (switch-semantics oracle).
+
+``process_serial`` applies packets one at a time via lax.scan, mirroring the
+per-packet MAU pipeline of the switch:
+
+  decay feature atoms -> update atoms -> compute statistics -> emit features
+
+Two fidelity modes:
+  * ``exact``  — real mul/div/sqrt, all 4 decay instances updated per packet.
+  * ``switch`` — shift-approximated arithmetic (arith.py), math-unit sqrt,
+    and the paper's round-robin decay handling: a single decay instance
+    updated per packet (Figure 5), with iterated-halving quantised decay.
+
+The parallel TPU-native implementation (core/parallel.py) is validated
+against ``exact`` mode of this oracle; the Pallas kernel
+(kernels/feature_update) is validated against both.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arith
+from repro.core.state import (
+    BI_KEYS, BI_STATS, LAMBDAS, N_BI, N_DECAY, N_FEATURES, N_UNI, UNI_KEYS,
+    UNI_STATS, init_state, packet_slots,
+)
+
+_LAM = jnp.asarray(LAMBDAS, jnp.float32)           # (4,)
+
+
+def _decay_all(lam: jax.Array, dt: jax.Array, mode: str) -> jax.Array:
+    if mode == "switch":
+        k = jnp.clip(jnp.floor(lam * jnp.maximum(dt, 0.0)), 0.0, 31.0)
+        return jnp.exp2(-k)
+    return jnp.exp2(-lam * jnp.maximum(dt, 0.0))
+
+
+def _stream_update(last_t, w, ls, ss, rr, t, length, mode: str):
+    """Decay + update one stream's atoms (vectorised over leading dims).
+
+    last_t/w/ls/ss: (..., N_DECAY); rr: (...,) int32; t, length: (...,).
+    Returns new (last_t, w, ls, ss, rr).
+    """
+    dt = jnp.maximum(t[..., None] - last_t, 0.0)
+    fresh = last_t < 0.0                            # never seen
+    delta = jnp.where(fresh, 0.0, _decay_all(_LAM, dt, mode))
+    if mode == "switch":
+        # round-robin: only instance rr is decayed+updated this packet
+        upd = jax.nn.one_hot(rr % N_DECAY, N_DECAY, dtype=jnp.float32)
+        new_rr = rr + 1
+    else:
+        upd = jnp.ones_like(delta)
+        new_rr = rr
+    dec = (lambda v: jnp.floor(v)) if mode == "switch" else (lambda v: v)
+    w2 = jnp.where(upd > 0, dec(w * delta) + 1.0, w)
+    ls2 = jnp.where(upd > 0, dec(ls * delta) + length[..., None], ls)
+    ss2 = jnp.where(upd > 0, dec(ss * delta) + length[..., None] ** 2, ss)
+    lt2 = jnp.where(upd > 0, jnp.broadcast_to(t[..., None], last_t.shape), last_t)
+    return lt2, w2, ls2, ss2, new_rr
+
+
+def _stream_stats(w, ls, ss, mode: str):
+    """(mu, var, sigma) per decay instance."""
+    mu = arith.div(ls, w, mode)
+    ex2 = arith.div(ss, w, mode)
+    var = jnp.abs(ex2 - arith.square(mu, mode))
+    sigma = arith.sqrt(var, mode)
+    return mu, var, sigma
+
+
+def _packet_step(state: Dict, pkt, mode: str):
+    """Process one packet. pkt: dict of scalars (slots precomputed)."""
+    t, length = pkt["ts"], pkt["length"]
+    feats = []
+
+    # ---- unidirectional keys ----
+    uni = state["uni"]
+    ki = jnp.arange(N_UNI)
+    slots = jnp.stack([pkt["src_mac_ip"], pkt["src_ip"]])      # (2,)
+    g = lambda a: a[ki, slots]                                 # (2, N_DECAY)
+    lt, w, ls, ss, rr = (g(uni["last_t"]), g(uni["w"]), g(uni["ls"]),
+                         g(uni["ss"]), uni["rr"][ki, slots])
+    tb = jnp.broadcast_to(t, (N_UNI,))
+    lb = jnp.broadcast_to(length, (N_UNI,))
+    lt, w, ls, ss, rr = _stream_update(lt, w, ls, ss, rr, tb, lb, mode)
+    mu, var, sigma = _stream_stats(w, ls, ss, mode)
+    feats.append(jnp.stack([w, mu, sigma], axis=-1).reshape(-1))  # (2*4*3,)
+    s = lambda name, v: uni[name].at[ki, slots].set(v)
+    state = {**state, "uni": {"last_t": s("last_t", lt), "w": s("w", w),
+                              "ls": s("ls", ls), "ss": s("ss", ss),
+                              "rr": uni["rr"].at[ki, slots].set(rr)}}
+
+    # ---- bidirectional keys ----
+    bi = state["bi"]
+    kb = jnp.arange(N_BI)
+    bslots = jnp.stack([pkt["channel"], pkt["socket"]])        # (2,)
+    d = pkt["dir"]
+    o = 1 - d
+    gb = lambda a: a[kb, bslots]                               # (2, 2, N_DECAY)
+    lt_b, w_b, ls_b, ss_b = (gb(bi["last_t"]), gb(bi["w"]), gb(bi["ls"]),
+                             gb(bi["ss"]))
+    rr_b = bi["rr"][kb, bslots]
+    # update own-direction stream
+    own = lambda a: a[kb, d]                                   # (2, N_DECAY)
+    lt_o, w_o, ls_o, ss_o, rr_o = _stream_update(
+        own(lt_b), own(w_b), own(ls_b), own(ss_b), rr_b,
+        jnp.broadcast_to(t, (N_BI,)), jnp.broadcast_to(length, (N_BI,)), mode)
+    mu_o, var_o, sig_o = _stream_stats(w_o, ls_o, ss_o, mode)
+    # opposite-direction stats (stored values — stale, as on the switch)
+    opp = lambda a: a[kb, o]
+    mu_p, var_p, sig_p = _stream_stats(opp(w_b), opp(ls_b), opp(ss_b), mode)
+
+    # SR update (decayed sum of residual products, §Table 2)
+    sr = bi["sr"][kb, bslots]
+    sr_lt = bi["sr_last_t"][kb, bslots]
+    res_last = bi["res_last"][kb, bslots]                      # (2, 2, N_DECAY)
+    r = length - mu_o                                          # (2, N_DECAY)
+    dt_sr = jnp.maximum(t - sr_lt, 0.0)
+    dsr = jnp.where(sr_lt < 0, 0.0, _decay_all(_LAM, dt_sr, mode))
+    r_opp = res_last[kb, o]                                    # (2, N_DECAY)
+    sr2 = sr * dsr + r * r_opp
+    res_last2 = res_last.at[kb, d].set(r)
+
+    # bidirectional statistics
+    mag = arith.sqrt(arith.square(mu_o, mode) + arith.square(mu_p, mode), mode)
+    rad = arith.sqrt(arith.square(var_o, mode) + arith.square(var_p, mode), mode)
+    cov = arith.div(sr2, w_o + opp(w_b), mode)
+    denom = (arith.shift_mul(sig_o, sig_p) if mode == "switch"
+             else sig_o * sig_p)
+    pcc = arith.div(cov, denom, mode)
+    feats.append(jnp.stack([w_o, mu_o, sig_o, mag, rad, cov, pcc],
+                           axis=-1).reshape(-1))               # (2*4*7,)
+
+    sb = lambda name, v: bi[name].at[kb, bslots].set(v)
+    lt_b2 = lt_b.at[kb, d].set(lt_o)
+    w_b2 = w_b.at[kb, d].set(w_o)
+    ls_b2 = ls_b.at[kb, d].set(ls_o)
+    ss_b2 = ss_b.at[kb, d].set(ss_o)
+    state = {**state, "bi": {
+        "last_t": sb("last_t", lt_b2), "w": sb("w", w_b2),
+        "ls": sb("ls", ls_b2), "ss": sb("ss", ss_b2),
+        "sr": bi["sr"].at[kb, bslots].set(sr2),
+        "sr_last_t": bi["sr_last_t"].at[kb, bslots].set(
+            jnp.broadcast_to(t, (N_BI, N_DECAY))),
+        "res_last": sb("res_last", res_last2),
+        "rr": bi["rr"].at[kb, bslots].set(rr_o),
+    }}
+    features = jnp.concatenate(feats)                          # (N_FEATURES,)
+    return state, features
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def process_serial(state: Dict, pkts: Dict[str, jax.Array],
+                   mode: str = "exact") -> Tuple[Dict, jax.Array]:
+    """Sequential per-packet processing (switch semantics).
+
+    pkts: arrays of shape (n,). Returns (new_state, features (n, N_FEATURES)).
+    """
+    from repro.core.state import state_slots
+    n_slots = state_slots(state)
+    slots = packet_slots(pkts, n_slots)
+    xs = {"ts": pkts["ts"].astype(jnp.float32),
+          "length": pkts["length"].astype(jnp.float32), **slots}
+    tables = {k: state[k] for k in ("uni", "bi")}
+
+    def step(tb, x):
+        st, f = _packet_step(tb, x, mode)
+        return {k: st[k] for k in ("uni", "bi")}, f
+
+    tables, feats = jax.lax.scan(step, tables, xs)
+    return tables, feats

@@ -1,0 +1,62 @@
+"""Feature-record sampling — the paper's key architectural move.
+
+Peregrine computes features for EVERY packet in the data plane and then
+samples the *records* (one per epoch of x packets) sent to the ML detector.
+The baseline (Kitsune middlebox model) samples *raw packets* before feature
+computation.  ``epoch_sample`` implements the former; the latter is simply
+slicing the packet arrays before calling the pipeline (see
+``detection.kitsune_baseline``).
+
+Beyond-paper samplers (per-flow, reservoir) are provided for ablations.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def epoch_indices(n_packets: int, epoch: int, offset: int = 0) -> np.ndarray:
+    """Indices of packets that close an epoch (every ``epoch``-th packet).
+
+    ``offset`` carries the running packet count across batches so epochs are
+    continuous over a streamed trace.
+    """
+    glob = np.arange(n_packets) + offset + 1
+    return np.where(glob % epoch == 0)[0]
+
+
+def epoch_sample(features: jax.Array, epoch: int, offset: int = 0):
+    """features: (n, F) per-packet features -> (records (m, F), indices)."""
+    idx = epoch_indices(features.shape[0], epoch, offset)
+    return features[jnp.asarray(idx)], idx
+
+
+def packet_sample_indices(n_packets: int, rate: int, offset: int = 0) -> np.ndarray:
+    """Raw-packet sampling (the baseline's 1:rate pre-FC sampling)."""
+    return epoch_indices(n_packets, rate, offset)
+
+
+def per_flow_epoch_indices(slots: np.ndarray, epoch: int) -> np.ndarray:
+    """Beyond-paper: close an epoch every x packets *per flow slot* —
+    denser coverage of low-rate flows at equal record budget."""
+    order = np.argsort(slots, kind="stable")
+    s = slots[order]
+    # rank within flow
+    start = np.r_[True, s[1:] != s[:-1]]
+    seg_id = np.cumsum(start) - 1
+    first_pos = np.zeros(seg_id.max() + 1, dtype=np.int64)
+    np.minimum.at(first_pos, seg_id, np.arange(len(s)))
+    rank = np.arange(len(s)) - first_pos[seg_id]
+    pick = (rank + 1) % epoch == 0
+    return np.sort(order[pick])
+
+
+def reservoir_indices(n_packets: int, budget: int, seed: int = 0) -> np.ndarray:
+    """Beyond-paper: uniform reservoir over the batch at fixed record budget."""
+    rng = np.random.default_rng(seed)
+    if budget >= n_packets:
+        return np.arange(n_packets)
+    return np.sort(rng.choice(n_packets, size=budget, replace=False))

@@ -1,0 +1,109 @@
+"""Flow-state tables — the TPU analogue of the switch's register arrays.
+
+Slots are direct-indexed by ``hash(flow_key) % n_slots`` with *no* collision
+resolution, exactly like the switch's stateful SRAM arrays (colliding flows
+merge — part of the fidelity model, noted in DESIGN.md).
+
+Four decay instances per atom (lambda = 10, 1, 1/10, 1/60 — windows 100ms /
+1s / 10s / 60s) as in §4.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LAMBDAS = (10.0, 1.0, 0.1, 1.0 / 60.0)
+N_DECAY = len(LAMBDAS)
+
+# key types
+UNI_KEYS = ("src_mac_ip", "src_ip")            # unidirectional stats
+BI_KEYS = ("channel", "socket")                # bidirectional stats
+N_UNI, N_BI = len(UNI_KEYS), len(BI_KEYS)
+
+UNI_STATS = ("w", "mean", "std")
+BI_STATS = ("w", "mean", "std", "magnitude", "radius", "cov", "pcc")
+N_FEATURES = N_UNI * N_DECAY * len(UNI_STATS) + N_BI * N_DECAY * len(BI_STATS)
+
+FEATURE_NAMES = tuple(
+    f"{k}:{lam}:{s}"
+    for k in UNI_KEYS for lam in LAMBDAS for s in UNI_STATS
+) + tuple(
+    f"{k}:{lam}:{s}"
+    for k in BI_KEYS for lam in LAMBDAS for s in BI_STATS
+)
+
+
+def init_state(n_slots: int) -> Dict:
+    """Fresh flow tables. Shapes:
+
+    uni tables: (N_UNI, n_slots, N_DECAY) atoms; bi tables carry a direction
+    axis (N_BI, n_slots, 2, N_DECAY) plus channel-level SR state.
+    """
+    z = jnp.zeros
+    return {
+        "uni": {
+            "last_t": z((N_UNI, n_slots, N_DECAY)) - 1.0,
+            "w": z((N_UNI, n_slots, N_DECAY)),
+            "ls": z((N_UNI, n_slots, N_DECAY)),
+            "ss": z((N_UNI, n_slots, N_DECAY)),
+            "rr": z((N_UNI, n_slots), jnp.int32),
+        },
+        "bi": {
+            "last_t": z((N_BI, n_slots, 2, N_DECAY)) - 1.0,
+            "w": z((N_BI, n_slots, 2, N_DECAY)),
+            "ls": z((N_BI, n_slots, 2, N_DECAY)),
+            "ss": z((N_BI, n_slots, 2, N_DECAY)),
+            "sr": z((N_BI, n_slots, N_DECAY)),
+            "sr_last_t": z((N_BI, n_slots, N_DECAY)) - 1.0,
+            "res_last": z((N_BI, n_slots, 2, N_DECAY)),
+            "rr": z((N_BI, n_slots), jnp.int32),
+        },
+    }
+
+
+def state_slots(state: Dict) -> int:
+    """Static slot count, derived from table shapes (jit-safe)."""
+    return state["uni"]["w"].shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Flow-key hashing (CRC-like mix, vectorised)
+# ---------------------------------------------------------------------------
+def _mix(h: jax.Array, v: jax.Array) -> jax.Array:
+    h = (h ^ v) * jnp.uint32(0x9E3779B1)
+    return h ^ (h >> 15)
+
+
+def hash_fields(fields, salt: int) -> jax.Array:
+    h = jnp.full(fields[0].shape, jnp.uint32(salt ^ 0x811C9DC5))
+    for f in fields:
+        h = _mix(h, f.astype(jnp.uint32))
+    return h
+
+
+def packet_slots(pkts: Dict[str, jax.Array], n_slots: int) -> Dict[str, jax.Array]:
+    """Per-packet slot indices + channel direction bit.
+
+    pkts: {ts, src, dst, sport, dport, proto, length} arrays of shape (n,).
+    Channel/socket keys are canonicalised (min/max endpoint) so both
+    directions land in the same slot; ``dir`` = 0 if src is the canonical
+    low endpoint else 1.
+    """
+    src, dst = pkts["src"], pkts["dst"]
+    sport, dport = pkts["sport"], pkts["dport"]
+    lo_is_src = src <= dst
+    ip_lo = jnp.where(lo_is_src, src, dst)
+    ip_hi = jnp.where(lo_is_src, dst, src)
+    p_lo = jnp.where(lo_is_src, sport, dport)
+    p_hi = jnp.where(lo_is_src, dport, sport)
+    ns = jnp.uint32(n_slots)
+    return {
+        "src_mac_ip": (hash_fields((src,), 1) % ns).astype(jnp.int32),
+        "src_ip": (hash_fields((src,), 2) % ns).astype(jnp.int32),
+        "channel": (hash_fields((ip_lo, ip_hi), 3) % ns).astype(jnp.int32),
+        "socket": (hash_fields((ip_lo, ip_hi, p_lo, p_hi, pkts["proto"]), 4)
+                   % ns).astype(jnp.int32),
+        "dir": (~lo_is_src).astype(jnp.int32),
+    }

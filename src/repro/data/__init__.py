@@ -1,0 +1,1 @@
+from repro.data.pipeline import lm_batches, Prefetcher, phv_batches  # noqa: F401

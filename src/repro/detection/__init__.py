@@ -1,0 +1,3 @@
+from repro.detection.kitnet import KitNet, train_kitnet, score_kitnet  # noqa: F401
+from repro.detection.metrics import auc, f1_at_fpr  # noqa: F401
+from repro.detection.runner import run_peregrine, run_kitsune_baseline  # noqa: F401

@@ -1,0 +1,220 @@
+"""KitNET (Kitsune's detector, arXiv: NDSS'18) in JAX.
+
+Architecture (§3.4 of the Peregrine paper):
+  * Feature Mapper — clusters the F features into k groups of size <= m by
+    correlation distance (hierarchical clustering, as Kitsune's FM).
+  * Ensemble layer — one small autoencoder per group
+    (d -> ceil(0.75 d) -> d, sigmoid), inputs 0-1 normalised per feature.
+  * Output layer — an autoencoder over the k ensemble RMSEs; the final
+    anomaly score is its reconstruction RMSE.
+
+Training is single-pass minibatched SGD in JAX (the original is per-record
+SGD; same objective, batched for TPU/vector efficiency — deviation recorded
+in DESIGN.md).  All ensemble AEs run as ONE padded batched einsum so the MD
+stage is a single fused computation (see kernels/kitnet_ae for the Pallas
+version).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from scipy.cluster.hierarchy import linkage, to_tree
+
+
+# ---------------------------------------------------------------------------
+# Feature mapper
+# ---------------------------------------------------------------------------
+def feature_map(train_feats: np.ndarray, max_size: int = 10) -> List[np.ndarray]:
+    """Cluster feature indices by correlation distance; clusters <= max_size."""
+    X = np.asarray(train_feats, np.float64)
+    F = X.shape[1]
+    std = X.std(0)
+    Xn = (X - X.mean(0)) / np.where(std > 1e-9, std, 1.0)
+    corr = np.clip((Xn.T @ Xn) / max(X.shape[0], 1), -1.0, 1.0)
+    dist = 1.0 - np.abs(corr)
+    np.fill_diagonal(dist, 0.0)
+    # condensed form
+    iu = np.triu_indices(F, 1)
+    Z = linkage(dist[iu], method="average")
+    root = to_tree(Z)
+
+    clusters: List[np.ndarray] = []
+
+    def walk(node):
+        ids = node.pre_order(lambda x: x.id)
+        if len(ids) <= max_size or node.is_leaf():
+            clusters.append(np.asarray(sorted(ids), np.int32))
+        else:
+            walk(node.left)
+            walk(node.right)
+
+    walk(root)
+    return clusters
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class KitNet:
+    idx: jnp.ndarray          # (k, m) feature indices per AE (padded)
+    mask: jnp.ndarray         # (k, m) 1 for real slots
+    params: Dict[str, jnp.ndarray]
+    norm_min: jnp.ndarray     # (F,)
+    norm_max: jnp.ndarray     # (F,)
+    out_min: jnp.ndarray      # (k,) RMSE normalisation for the output AE
+    out_max: jnp.ndarray
+
+
+def _pad_clusters(clusters: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    k = len(clusters)
+    m = max(len(c) for c in clusters)
+    idx = np.zeros((k, m), np.int32)
+    mask = np.zeros((k, m), np.float32)
+    for i, c in enumerate(clusters):
+        idx[i, :len(c)] = c
+        mask[i, :len(c)] = 1.0
+    return idx, mask
+
+
+def init_kitnet(key, clusters: List[np.ndarray], n_features: int,
+                hidden_ratio: float = 0.75) -> KitNet:
+    idx, mask = _pad_clusters(clusters)
+    k, m = idx.shape
+    h = max(1, int(np.ceil(hidden_ratio * m)))
+    kh = max(1, int(np.ceil(hidden_ratio * k)))
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s1, s2 = 1.0 / np.sqrt(m), 1.0 / np.sqrt(k)
+    params = {
+        "W1": jax.random.normal(k1, (k, m, h)) * s1,
+        "b1": jnp.zeros((k, h)),
+        "W2": jax.random.normal(k2, (k, h, m)) * s1,
+        "b2": jnp.zeros((k, m)),
+        "V1": jax.random.normal(k3, (k, kh)) * s2,
+        "c1": jnp.zeros((kh,)),
+        "V2": jax.random.normal(k4, (kh, k)) * s2,
+        "c2": jnp.zeros((k,)),
+    }
+    return KitNet(idx=jnp.asarray(idx), mask=jnp.asarray(mask), params=params,
+                  norm_min=jnp.zeros((n_features,)),
+                  norm_max=jnp.ones((n_features,)),
+                  out_min=jnp.zeros((k,)), out_max=jnp.ones((k,)))
+
+
+def _normalize(x, lo, hi):
+    # Benign training data lands in [0,1]; eval values beyond the training
+    # range are allowed out to 4x so flood-style feature explosions sit far
+    # off the AEs' learned manifold (big reconstruction error) without
+    # overflowing f32 on constant-in-training columns.  (Kitsune updates its
+    # running min/max online instead; deviation recorded in DESIGN.md.)
+    return jnp.clip((x - lo) / jnp.maximum(hi - lo, 1e-9), 0.0, 4.0)
+
+
+def ensemble_rmse(params, idx, mask, xb) -> jnp.ndarray:
+    """xb: (B, F) normalised features -> per-AE RMSE (B, k)."""
+    sub = xb[:, idx]                                  # (B, k, m)
+    sub = sub * mask[None]
+    h = jax.nn.sigmoid(jnp.einsum("bkm,kmh->bkh", sub, params["W1"])
+                       + params["b1"][None])
+    y = jax.nn.sigmoid(jnp.einsum("bkh,khm->bkm", h, params["W2"])
+                       + params["b2"][None])
+    se = ((y - sub) ** 2) * mask[None]
+    denom = jnp.maximum(mask.sum(-1), 1.0)
+    return jnp.sqrt(se.sum(-1) / denom[None])        # (B, k)
+
+
+def output_rmse(params, r_norm) -> jnp.ndarray:
+    """r_norm: (B, k) normalised ensemble RMSEs -> final score (B,)."""
+    h = jax.nn.sigmoid(r_norm @ params["V1"] + params["c1"][None])
+    y = jax.nn.sigmoid(h @ params["V2"] + params["c2"][None])
+    return jnp.sqrt(jnp.mean((y - r_norm) ** 2, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+def train_kitnet(feats_train: np.ndarray, seed: int = 0, max_size: int = 10,
+                 lr: float = 0.05, batch: int = 256, epochs: int = 4,
+                 ) -> KitNet:
+    """Fit FM + normalisation on the benign training records, then SGD."""
+    F = feats_train.shape[1]
+    clusters = feature_map(feats_train, max_size)
+    net = init_kitnet(jax.random.PRNGKey(seed), clusters, F)
+    lo = jnp.asarray(feats_train.min(0))
+    hi = jnp.asarray(feats_train.max(0))
+    net = dataclasses.replace(net, norm_min=lo, norm_max=hi)
+
+    X = jnp.asarray(feats_train, jnp.float32)
+    n = X.shape[0]
+    batch = max(1, min(batch, n))
+    nb = max(1, n // batch)
+    Xb = X[:nb * batch].reshape(nb, batch, F)
+
+    idx, mask = net.idx, net.mask
+
+    def ens_loss(p, xb):
+        xn = _normalize(xb, lo, hi)
+        sub = xn[:, idx] * mask[None]
+        h = jax.nn.sigmoid(jnp.einsum("bkm,kmh->bkh", sub, p["W1"]) + p["b1"][None])
+        y = jax.nn.sigmoid(jnp.einsum("bkh,khm->bkm", h, p["W2"]) + p["b2"][None])
+        return jnp.mean(((y - sub) ** 2) * mask[None])
+
+    @jax.jit
+    def ens_epoch(p, _):
+        def step(p, xb):
+            g = jax.grad(ens_loss)(p, xb)
+            p = jax.tree_util.tree_map(
+                lambda a, b: a - lr * b if a.ndim else a, p, g)
+            return p, ()
+        p, _ = jax.lax.scan(step, p, Xb)
+        return p, ()
+
+    ens_params = {k: v for k, v in net.params.items() if k[0] in "Wb"}
+    ens_params, _ = jax.lax.scan(ens_epoch, ens_params, None, length=epochs)
+    params = {**net.params, **ens_params}
+
+    # ensemble RMSEs over training set -> output AE normalisation + training
+    r_train = ensemble_rmse(params, idx, mask, _normalize(X, lo, hi))
+    r_lo, r_hi = r_train.min(0), r_train.max(0)
+    rn = _normalize(r_train, r_lo, r_hi)
+    k = rn.shape[1]
+    Rb = rn[:nb * batch].reshape(nb, batch, k)
+
+    def out_loss(p, rb):
+        h = jax.nn.sigmoid(rb @ p["V1"] + p["c1"][None])
+        y = jax.nn.sigmoid(h @ p["V2"] + p["c2"][None])
+        return jnp.mean((y - rb) ** 2)
+
+    @jax.jit
+    def out_epoch(p, _):
+        def step(p, rb):
+            g = jax.grad(out_loss)(p, rb)
+            p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+            return p, ()
+        p, _ = jax.lax.scan(step, p, Rb)
+        return p, ()
+
+    out_params = {k2: v for k2, v in params.items() if k2[0] in "Vc"}
+    out_params, _ = jax.lax.scan(out_epoch, out_params, None, length=epochs)
+    params = {**params, **out_params}
+
+    return dataclasses.replace(net, params=params, out_min=r_lo, out_max=r_hi)
+
+
+@jax.jit
+def _score(params, idx, mask, lo, hi, r_lo, r_hi, X):
+    xn = _normalize(X, lo, hi)
+    r = ensemble_rmse(params, idx, mask, xn)
+    rn = _normalize(r, r_lo, r_hi)
+    return output_rmse(params, rn)
+
+
+def score_kitnet(net: KitNet, feats: np.ndarray) -> np.ndarray:
+    """Anomaly RMSE score per record."""
+    X = jnp.asarray(feats, jnp.float32)
+    return np.asarray(_score(net.params, net.idx, net.mask, net.norm_min,
+                             net.norm_max, net.out_min, net.out_max, X))

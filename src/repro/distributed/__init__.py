@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules, use_rules, current_rules, lshard, logical_spec,
+)

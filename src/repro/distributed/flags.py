@@ -1,0 +1,64 @@
+"""Runtime flags threaded to model stacks without signature changes."""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.scan_unroll = False
+        self.moe_dispatch = None   # None -> dense; else (mesh, dp_axes, ep_axis)
+        self.remat_override = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_scan_unroll(on: bool = True):
+    """Fully unroll layer scans (dry-run fidelity mode: HLO cost analysis
+    counts while-loop bodies once, so the roofline pass lowers unrolled)."""
+    prev = _STATE.scan_unroll
+    _STATE.scan_unroll = on
+    try:
+        yield
+    finally:
+        _STATE.scan_unroll = prev
+
+
+def scan_unroll() -> bool:
+    return _STATE.scan_unroll
+
+
+@contextlib.contextmanager
+def use_local_moe_dispatch(mesh, dp_axes, ep_axis="model"):
+    """Route MoE FFN through the shard_map local-dispatch path (§Perf):
+    token->expert scatter stays shard-local, expert outputs combine with one
+    psum over the EP axis instead of full-buffer all-reduce/all-gather."""
+    prev = _STATE.moe_dispatch
+    _STATE.moe_dispatch = (mesh, tuple(dp_axes) if not isinstance(dp_axes, str)
+                           else (dp_axes,), ep_axis)
+    try:
+        yield
+    finally:
+        _STATE.moe_dispatch = prev
+
+
+def moe_dispatch():
+    return _STATE.moe_dispatch
+
+
+@contextlib.contextmanager
+def use_remat_override(policy):
+    """Override the per-arch TrainConfig remat policy (§Perf variants)."""
+    prev = _STATE.remat_override
+    _STATE.remat_override = policy
+    try:
+        yield
+    finally:
+        _STATE.remat_override = prev
+
+
+def remat_override():
+    return _STATE.remat_override

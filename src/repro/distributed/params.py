@@ -1,0 +1,217 @@
+"""Parameter / optimizer-state / batch / cache PartitionSpec inference.
+
+Specs are derived from leaf *paths* in the param pytree (name-based rules:
+Megatron-style TP for attention & MLP, EP for MoE experts, replication for
+norms and small SSM blocks) and expressed in *logical* axis names resolved
+through ``AxisRules`` — the same mechanism the models use for activation
+constraints, so params and activations always agree.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import AxisRules
+
+
+def _leaf_logical(path: Tuple, leaf, cfg: ArchConfig, model_size: int,
+                  fsdp_size: int = 0, serve_ff_size: int = 0):
+    """Logical axis names per dimension for one param leaf.
+
+    ``fsdp_size`` > 0 additionally shards one large *unsharded* dim over the
+    DP axes ("fsdp" logical name) — ZeRO-3/FSDP posture for >10B archs; the
+    per-dim divisibility is checked here so smaller leaves fall back to
+    replication automatically.
+    """
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    last = names[-1]
+    stacked = "layers" in names
+    nd = leaf.ndim - (1 if stacked else 0)
+    dims = leaf.shape[-nd:] if nd else ()
+
+    def fs(dim_idx, name="fsdp2"):
+        """FSDP logical axis if that dim is divisible, else None.
+
+        2D (dense/attention/embedding) leaves use 'fsdp2', 3D expert leaves
+        use 'fsdp' — separately bindable so the §Perf 'experts-only FSDP'
+        variant can keep dense weights TP-resident (their dp-sharded
+        contractions otherwise lower to full-output all-reduces).
+        """
+        if fsdp_size and dims[dim_idx] % fsdp_size == 0 and \
+                dims[dim_idx] >= fsdp_size:
+            return name
+        return None
+
+    def out(*ax):
+        ax = list(ax) + [None] * (nd - len(ax))
+        if stacked:
+            ax = [None] + ax
+        return tuple(ax[:leaf.ndim])
+
+    kv_ok = cfg.n_kv_heads * cfg.hd % max(model_size, 1) == 0
+    if last == "embed":
+        return out("vocab", fs(1))
+    if last == "lm_head":
+        return out(fs(0), "vocab")
+    if last in ("wq",):
+        return out(fs(0), "heads")
+    if last in ("wk", "wv"):
+        return out(fs(0), "kv_heads" if kv_ok else None)
+    if last == "wo" and nd == 2 and "attn" in names:
+        return out("heads", fs(1))
+    if last in ("wi", "wg") and nd == 2:
+        return out(fs(0), "ff")
+    if last == "wo" and nd == 2:
+        return out("ff", fs(1))
+    if last in ("wi", "wg") and nd == 3:              # MoE experts (E, d, f)
+        if serve_ff_size and dims[2] % serve_ff_size == 0:
+            # serving posture: 2D expert sharding (E x f) — fits 1T weights
+            # without per-step FSDP gathers (§Perf kimi decode iteration)
+            return out("experts", None, "serve_ff")
+        return out("experts", fs(1, "fsdp"), None)
+    if last == "wo" and nd == 3:                      # (E, f, d)
+        if serve_ff_size and dims[1] % serve_ff_size == 0:
+            return out("experts", "serve_ff", None)
+        return out("experts", fs(1, "fsdp"), None)
+    if last == "router":
+        return out(None, None)
+    # SSM / xLSTM / norms / biases / conv: replicated
+    return out()
+
+
+def param_specs(params, cfg: ArchConfig, rules: AxisRules,
+                model_size: int, fsdp_size: int = 0, serve_ff_size: int = 0):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [rules.spec(_leaf_logical(path, leaf, cfg, model_size, fsdp_size,
+                                      serve_ff_size))
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _shard_over_opt(spec: P, shape, rules: AxisRules, opt_axes,
+                    mesh_shape: Dict[str, int]):
+    """ZeRO-1: additionally shard an optimizer-state leaf over the DP axis
+    along its largest dimension that is unsharded and divisible."""
+    opt_size = int(np.prod([mesh_shape[a] for a in opt_axes])) if opt_axes else 1
+    if opt_size <= 1:
+        return spec
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for d in dims:
+        for a in (d if isinstance(d, tuple) else (d,)):
+            if a is not None:
+                used.add(a)
+    if any(a in used for a in opt_axes):   # FSDP already uses the DP axes
+        return spec
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if dims[i] is None and shape[i] % opt_size == 0 and shape[i] >= opt_size:
+            dims[i] = opt_axes if len(opt_axes) > 1 else opt_axes[0]
+            return P(*dims)
+    return spec
+
+
+def opt_specs(opt_state, params_specs, cfg: ArchConfig, rules: AxisRules,
+              mesh_shape: Dict[str, int], zero1: bool):
+    """Specs for the optimizer-state pytree ({m, v, step} or adafactor)."""
+    opt_axes = rules.rules.get("opt")
+    if opt_axes is None:
+        zero1 = False
+    elif isinstance(opt_axes, str):
+        opt_axes = (opt_axes,)
+
+    def like_params(tree):
+        flat_p, _ = jax.tree_util.tree_flatten(params_specs)
+        flat_t, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        for spec, leaf in zip(flat_p, flat_t):
+            if zero1:
+                spec = _shard_over_opt(spec, leaf.shape, rules, opt_axes,
+                                       mesh_shape)
+            out.append(spec)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    specs = {}
+    for k, v in opt_state.items():
+        if k == "step":
+            specs[k] = P()
+        elif k in ("m", "v"):
+            specs[k] = like_params(v)
+        elif k in ("vr", "vc"):
+            # adafactor factored moments: inherit the parent param's spec
+            # minus the factored-out dimension (vr drops the last dim, vc the
+            # second-to-last) so multi-GB factored states stay sharded.
+            drop = -1 if k == "vr" else -2
+            flat_p = jax.tree_util.tree_leaves(params_specs)
+            flat_t, treedef = jax.tree_util.tree_flatten(v)
+            out = []
+            for spec, leaf in zip(flat_p, flat_t):
+                dims = list(spec)
+                if len(dims) >= abs(drop) and leaf.ndim == len(dims) - 1:
+                    del dims[drop]
+                    out.append(P(*dims))
+                else:
+                    out.append(P())
+            specs[k] = jax.tree_util.tree_unflatten(treedef, out)
+        else:
+            specs[k] = jax.tree_util.tree_map(lambda l: P(), v)
+    return specs
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, rules: AxisRules):
+    b = rules.rules.get("batch")
+    toks = P(b, None)
+    out = {"labels": toks}
+    if cfg.embed_inputs:
+        out["tokens"] = toks
+    else:
+        out["embeds"] = P(b, None, None)
+    if shape.kind == "decode":
+        out = {"tokens": toks}
+    return out
+
+
+def cache_specs(cache, cfg: ArchConfig, rules: AxisRules,
+                long_context: bool = False):
+    """Specs for the decode cache pytree.
+
+    When the arch's KV heads cannot shard over the model axis (K % TP != 0:
+    gemma2 K=4, qwen2-vl/kimi/phi K=8, granite K=1), the cache SEQUENCE axis
+    shards over "model" instead — decode attention becomes a seq-parallel
+    partial softmax (GSPMD lowers the LSE combine; the explicit schedule is
+    distributed/seq_parallel.py).  Without this, a 32k cache with replicated
+    KV exceeds per-chip HBM (qwen2-vl decode_32k: 160 GiB/chip replicated ->
+    5.3 GiB/chip seq-sharded).
+    """
+    b = rules.rules.get("batch")
+    kvh = rules.rules.get("kv_heads")
+    seq = rules.rules.get("batch") if long_context else None
+    kv_seq_tp = None if kvh is not None else "model"
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", str(p)) for p in path]
+        last = names[-1]
+        if last in ("k", "v", "attn_k", "attn_v"):
+            # (L_or_apps, B, S, K, hd)
+            if long_context:
+                return P(None, None, seq, kvh, None)
+            return P(None, b, kv_seq_tp, kvh, None)
+        if last == "pos":
+            return P()
+        if last in ("ssm",):
+            return P(None, b) if leaf.ndim > 1 else P()
+        if last == "conv":
+            return P(None, b)
+        # xlstm states (no leading layer axis): batch-shard dim 0
+        if leaf.ndim >= 1 and last in ("C", "n", "m", "c", "h"):
+            return P(b)
+        return P(*([None] * leaf.ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat])

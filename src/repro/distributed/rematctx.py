@@ -1,0 +1,47 @@
+"""Remat (activation-checkpoint) policy context.
+
+Model stacks consult ``current_remat()`` when building their layer scans so
+TrainConfig.remat reaches the layer body without threading a kwarg through
+every family's forward signature.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.policy = "none"
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_remat(policy: str):
+    prev = _STATE.policy
+    _STATE.policy = policy
+    try:
+        yield
+    finally:
+        _STATE.policy = prev
+
+
+def current_remat() -> str:
+    return _STATE.policy
+
+
+def maybe_remat(fn):
+    """Wrap a scan body according to the active policy."""
+    policy = _STATE.policy
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(policy)

@@ -1,0 +1,85 @@
+"""Sequence-parallel decode attention: explicit shard_map LSE combine.
+
+For long-context decode (long_500k) the KV cache is sharded along the
+sequence axis across the DP mesh axes.  Each shard computes a *partial*
+softmax over its KV slice plus its local (max, denominator); the shards are
+combined with the log-sum-exp trick over the mesh — flash-decoding's split-K
+schedule mapped onto the ICI domain.
+
+GSPMD derives an equivalent program from the einsum form automatically; this
+explicit version exists because (a) it pins the collective schedule (exactly
+one psum pair, no accidental all-gather of the cache) and (b) it is the unit
+the §Perf collective-term iteration tunes.  Equivalence against
+``attention.decode_attention`` is tested on a host-device mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+NEG_INF = -1e30
+
+
+def _local_partial(q, k, v, start, cache_len, scale):
+    """Partial attention over a local KV slice.
+
+    q: (B,H,d); k/v: (B,S_loc,K,d); start: global offset of this slice.
+    Returns (acc (B,H,d), m (B,H), l (B,H)).
+    """
+    B, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    t = start + jnp.arange(k.shape[1])[None, :]
+    ok = t < cache_len[:, None]
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                  # (B,K,G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(ok[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return (acc.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))
+
+
+def make_seq_parallel_decode(mesh: Mesh, seq_axes, kv_spec: P, q_spec: P):
+    """Build a seq-sharded decode attention fn for the given mesh binding."""
+    axis = seq_axes if isinstance(seq_axes, tuple) else (seq_axes,)
+
+    def fn(q, k_cache, v_cache, cache_len):
+        B, _, H, hd = q.shape
+        scale = 1.0 / math.sqrt(hd)
+
+        def local(qb, kb, vb, cl):
+            # index of this shard along the seq axes
+            idx = 0
+            for a in axis:
+                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            S_loc = kb.shape[1]
+            start = idx * S_loc
+            acc, m, l = _local_partial(qb[:, 0], kb, vb, start, cl, scale)
+            # LSE combine across seq shards
+            m_glob = jax.lax.pmax(m, axis)
+            corr = jnp.exp(m - m_glob)
+            l_glob = jax.lax.psum(l * corr, axis)
+            acc_glob = jax.lax.psum(acc * corr[..., None], axis)
+            out = acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+            return out[:, None].astype(qb.dtype)
+
+        def local_wrap(qb, kb, vb, cl):
+            return local(qb, kb, vb, cl)
+
+        return shard_map(
+            local_wrap, mesh=mesh,
+            in_specs=(q_spec, kv_spec, kv_spec, P()),
+            out_specs=q_spec,
+            check_rep=False,
+        )(q, k_cache, v_cache, cache_len)
+
+    return fn

@@ -1,0 +1,83 @@
+"""Logical-axis sharding: models annotate activations/params with *logical*
+axis names; launch code binds them to physical mesh axes.
+
+No mesh bound (tests, single-device smoke) -> every annotation is a no-op,
+so the exact same model code runs on 1 CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Default production rules: batch over (pod, data); model-parallel dims over
+# model; experts over model (EP); sequence sharding (decode long-context KV)
+# over data.
+PRODUCTION_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "expert_cap": ("pod", "data"),
+    "vocab": "model",
+    "embed": None,
+    "seq": None,
+    "kv_seq": None,          # overridden to ("pod", "data") for long-context
+    "ssm_inner": "model",
+    "opt": ("pod", "data"),  # ZeRO-1 optimizer-state axis
+}
+
+
+class AxisRules:
+    def __init__(self, rules: Dict[str, Axis]):
+        self.rules = dict(rules)
+
+    def spec(self, names: Sequence[Optional[str]]) -> P:
+        return P(*[self.rules.get(n) if n else None for n in names])
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.rules: Optional[AxisRules] = None
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Dict[str, Axis]]):
+    prev = _STATE.rules
+    _STATE.rules = AxisRules(rules) if rules is not None else None
+    try:
+        yield _STATE.rules
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _STATE.rules
+
+
+def logical_spec(names: Sequence[Optional[str]]) -> P:
+    r = _STATE.rules
+    if r is None:
+        return P(*[None] * len(names))
+    return r.spec(names)
+
+
+def lshard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical axis ``names``.
+
+    No-op when no rules are bound (single-device paths).
+    """
+    r = _STATE.rules
+    if r is None:
+        return x
+    assert x.ndim == len(names), (x.shape, names)
+    return jax.lax.with_sharding_constraint(x, r.spec(names))

@@ -1,0 +1,134 @@
+"""Peregrine feature-atom update as a Pallas TPU kernel — the paper's switch
+pipeline on a TPU core.
+
+One grid step processes a *chunk* of packets with the flow table resident in
+VMEM; an in-kernel ``fori_loop`` applies, per packet:
+
+    decay(dt) -> atom update (w, LS, SS across the 4 decay instances)
+              -> statistics (mu, sigma)
+
+exactly like the MAU pipeline (DESIGN.md §2).  The table tiles stay in VMEM
+across grid steps (sequential grid, ``input_output_aliases``) so the state
+never round-trips to HBM between chunks.  Dynamic row indexing models the
+switch's register-array access; on real TPU this lowers to sublane dynamic
+slices — the hillclimbed layout keeps the 4 decay instances contiguous in the
+lane dimension (a (slots, 4·3) tile) so each packet touches one row.
+
+Table layout: packed (n_slots, 12) f32 = [last_t*4 | w*4 | ls*4 | ss*4] is
+NOT used; we keep four (n_slots, 4) refs — measured better in interpret-mode
+sweeps and simpler aliasing.  Validated against the serial oracle
+(core/pipeline.py, exact mode, single key type).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.state import LAMBDAS, N_DECAY
+
+_LAM = tuple(LAMBDAS)
+
+
+def _fc_kernel(lam_ref, slots_ref, ts_ref, len_ref,
+               lt_in, w_in, ls_in, ss_in,
+               lt_out, w_out, ls_out, ss_out, stats_ref, *,
+               chunk: int, n_pkts: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _copy_in():
+        lt_out[...] = lt_in[...]
+        w_out[...] = w_in[...]
+        ls_out[...] = ls_in[...]
+        ss_out[...] = ss_in[...]
+
+    lam = lam_ref[...]                                  # (1, 4)
+
+    def body(i, _):
+        g = step * chunk + i
+        valid = g < n_pkts
+        slot = slots_ref[i]
+        t = ts_ref[i]
+        x = len_ref[i]
+
+        lt = lt_out[pl.ds(slot, 1), :]                  # (1, 4)
+        w = w_out[pl.ds(slot, 1), :]
+        ls = ls_out[pl.ds(slot, 1), :]
+        ss = ss_out[pl.ds(slot, 1), :]
+
+        fresh = lt < 0.0
+        dt = jnp.maximum(t - lt, 0.0)
+        delta = jnp.where(fresh, 0.0, jnp.exp2(-lam * dt))
+        w2 = w * delta + 1.0
+        ls2 = ls * delta + x
+        ss2 = ss * delta + x * x
+
+        mu = ls2 / w2
+        var = jnp.abs(ss2 / w2 - mu * mu)
+        sig = jnp.sqrt(var)
+
+        @pl.when(valid)
+        def _store():
+            lt_out[pl.ds(slot, 1), :] = jnp.full_like(lt, t)
+            w_out[pl.ds(slot, 1), :] = w2
+            ls_out[pl.ds(slot, 1), :] = ls2
+            ss_out[pl.ds(slot, 1), :] = ss2
+            stats_ref[pl.ds(i, 1), :] = jnp.concatenate(
+                [w2, mu, sig], axis=-1)                 # (1, 12)
+
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def feature_update(table, slots, ts, lens, *, chunk: int = 256,
+                   interpret: bool = True):
+    """Single-key-type streaming atom update.
+
+    table: {"last_t","w","ls","ss"} each (n_slots, N_DECAY) f32.
+    slots (n,) int32; ts/lens (n,) f32.
+    Returns (new_table, stats (n, N_DECAY*3) = [w | mu | sigma] per decay).
+    """
+    n = slots.shape[0]
+    n_slots = table["w"].shape[0]
+    nc = -(-n // chunk)
+    n_pad = nc * chunk
+    if n_pad != n:
+        slots = jnp.pad(slots, (0, n_pad - n))
+        ts = jnp.pad(ts, (0, n_pad - n))
+        lens = jnp.pad(lens, (0, n_pad - n))
+
+    kernel = functools.partial(_fc_kernel, chunk=chunk, n_pkts=n)
+    tab_spec = pl.BlockSpec((n_slots, N_DECAY), lambda s: (0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((1, N_DECAY), lambda s: (0, 0)),
+            pl.BlockSpec((chunk,), lambda s: (s,)),
+            pl.BlockSpec((chunk,), lambda s: (s,)),
+            pl.BlockSpec((chunk,), lambda s: (s,)),
+            tab_spec, tab_spec, tab_spec, tab_spec,
+        ],
+        out_specs=[tab_spec, tab_spec, tab_spec, tab_spec,
+                   pl.BlockSpec((chunk, N_DECAY * 3), lambda s: (s, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_slots, N_DECAY), jnp.float32),
+            jax.ShapeDtypeStruct((n_slots, N_DECAY), jnp.float32),
+            jax.ShapeDtypeStruct((n_slots, N_DECAY), jnp.float32),
+            jax.ShapeDtypeStruct((n_slots, N_DECAY), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, N_DECAY * 3), jnp.float32),
+        ],
+        input_output_aliases={4: 0, 5: 1, 6: 2, 7: 3},
+        interpret=interpret,
+    )(jnp.asarray(_LAM, jnp.float32)[None, :], slots, ts, lens,
+      table["last_t"], table["w"], table["ls"], table["ss"])
+    lt, w, ls, ss, stats = out
+    new_table = {"last_t": lt, "w": w, "ls": ls, "ss": ss}
+    return new_table, stats[:n]

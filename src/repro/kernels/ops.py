@@ -1,0 +1,32 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only: the
+kernels execute their bodies in Python-on-CPU for validation.  On a real TPU
+deployment set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.feature_update import feature_update as _feat
+from repro.kernels.kitnet_ae import kitnet_ensemble as _kitnet
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    bq=128, bk=128):
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  bq=bq, bk=bk, interpret=INTERPRET)
+
+
+def feature_update(table, slots, ts, lens, *, chunk=256):
+    return _feat(table, slots.astype(jnp.int32), ts.astype(jnp.float32),
+                 lens.astype(jnp.float32), chunk=chunk, interpret=INTERPRET)
+
+
+def kitnet_ensemble(x_sub, w1, b1, w2, b2, mask, *, bb=128):
+    return _kitnet(x_sub, w1, b1, w2, b2, mask, bb=bb, interpret=INTERPRET)

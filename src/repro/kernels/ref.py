@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import LAMBDAS, N_DECAY
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B,H,Sq,D); k/v: (B,K,Sk,D). Full-score fp32 softmax attention."""
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg,
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def feature_update_ref(table, slots, ts, lens):
+    """Serial oracle for the single-key streaming atom update (exact mode)."""
+    lam = jnp.asarray(LAMBDAS, jnp.float32)
+
+    def step(tab, pkt):
+        slot, t, x = pkt
+        lt = tab["last_t"][slot]
+        fresh = lt < 0
+        delta = jnp.where(fresh, 0.0, jnp.exp2(-lam * jnp.maximum(t - lt, 0)))
+        w2 = tab["w"][slot] * delta + 1.0
+        ls2 = tab["ls"][slot] * delta + x
+        ss2 = tab["ss"][slot] * delta + x * x
+        mu = ls2 / w2
+        sig = jnp.sqrt(jnp.abs(ss2 / w2 - mu * mu))
+        tab = {
+            "last_t": tab["last_t"].at[slot].set(t),
+            "w": tab["w"].at[slot].set(w2),
+            "ls": tab["ls"].at[slot].set(ls2),
+            "ss": tab["ss"].at[slot].set(ss2),
+        }
+        return tab, jnp.concatenate([w2, mu, sig])
+
+    table, stats = jax.lax.scan(step, table, (slots, ts, lens))
+    return table, stats
+
+
+def kitnet_ensemble_ref(x_sub, w1, b1, w2, b2, mask):
+    """x_sub: (B,k,m) -> per-AE RMSE (B,k)."""
+    xm = x_sub * mask[None]
+    h = jax.nn.sigmoid(jnp.einsum("bkm,kmh->bkh", xm, w1) + b1[None])
+    y = jax.nn.sigmoid(jnp.einsum("bkh,khm->bkm", h, w2) + b2[None])
+    se = ((y - xm) ** 2) * mask[None]
+    denom = jnp.maximum(mask.sum(-1), 1.0)
+    return jnp.sqrt(se.sum(-1) / denom[None])

@@ -1,0 +1,131 @@
+"""Per-cell step functions + ShapeDtypeStruct inputs for the dry-run.
+
+``input_specs(arch, shape)`` returns abstract stand-ins (weak-type-correct,
+shardable, zero allocation) for every input of the lowered step:
+  train_*    -> (train_state, {tokens|embeds, labels})     for train_step
+  prefill_*  -> (params, batch)                            for prefill_step
+  decode_*   -> (params, tokens(B,1), cache)               for serve_step
+
+Per-arch training posture (applied automatically, recorded in EXPERIMENTS):
+  >100B params : bf16 params, adafactor (factored 2nd moment), remat=full,
+                 FSDP param sharding over the DP axes, ZeRO-1
+  10–100B      : bf16 params, adamw fp32 moments (ZeRO-1 + FSDP), remat=dots
+  <10B         : fp32 params, adamw, remat=none, plain DP+TP
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, TrainConfig
+from repro.models import build_model
+from repro.models import transformer as tf
+from repro.training.train_step import init_train_state, make_train_step
+
+LONG_CONTEXT_WINDOW = 4096   # sliding window for zamba2 shared attn @ 500k
+
+
+def arch_for_cell(arch_name: str, shape: ShapeConfig) -> ArchConfig:
+    cfg = get_arch(arch_name)
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        cfg = dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def train_config_for(cfg: ArchConfig) -> TrainConfig:
+    from repro.distributed import flags as _flags
+    n = cfg.param_count()
+    override = _flags.remat_override()
+    if override is not None:
+        tc = _base_tc(n)
+        return dataclasses.replace(tc, remat=override)
+    return _base_tc(n)
+
+
+def _base_tc(n: float) -> TrainConfig:
+    if n > 100e9:
+        return TrainConfig(param_dtype="bfloat16", optimizer="adafactor",
+                           remat="full", zero1=True)
+    if n > 10e9:
+        return TrainConfig(param_dtype="bfloat16", optimizer="adamw",
+                           opt_state_dtype="float32", remat="full", zero1=True)
+    return TrainConfig(param_dtype="float32", optimizer="adamw", remat="dots")
+
+
+def use_fsdp(cfg: ArchConfig) -> bool:
+    return cfg.param_count() > 10e9
+
+
+def abstract_state(cfg: ArchConfig, tc: TrainConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda k: init_train_state(model, tc, k), jax.random.PRNGKey(0))
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda k: model.init_params(k, dtype=dtype),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, batch, max_seq, dtype))
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    out = {"labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.embed_inputs:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_in), jnp.bfloat16)
+    return out
+
+
+def input_specs(arch_name: str, shape_name: str, cfg: ArchConfig = None):
+    """(step_fn, abstract_inputs tuple, cfg, tc) for one dry-run cell.
+
+    ``cfg`` overrides the registry config (used for the truncated-depth
+    unrolled lowerings that feed the roofline cost extrapolation)."""
+    shape = SHAPES[shape_name]
+    if cfg is None:
+        cfg = arch_for_cell(arch_name, shape)
+    model = build_model(cfg)
+    tc = train_config_for(arch_for_cell(arch_name, shape))
+
+    if shape.kind == "train":
+        state = abstract_state(cfg, tc)
+        batch = batch_struct(cfg, shape)
+        step = make_train_step(model, tc)
+        return step, (state, batch), cfg, tc
+
+    if shape.kind == "prefill":
+        params = abstract_params(cfg)
+        batch = batch_struct(cfg, shape)
+
+        def prefill_step(params, batch):
+            logits, aux, cache = tf.forward(params, cfg, batch,
+                                            build_cache=not cfg.is_encoder,
+                                            max_seq=shape.seq_len)
+            return logits[:, -1:], cache
+
+        return prefill_step, (params, batch), cfg, tc
+
+    # decode
+    params = abstract_params(cfg)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    # position the cache at seq_len-1 (full context) — pos is a traced input
+    batch = batch_struct(cfg, shape)
+
+    def serve_step(params, tokens, cache):
+        return tf.decode_step(params, cfg, tokens, cache)
+
+    return serve_step, (params, batch["tokens"], cache), cfg, tc

@@ -1,0 +1,119 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lshard
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gain.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, gain: jax.Array, bias: jax.Array, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gain.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs     # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions: (B, S, 3) [temporal, height, width] — the stub
+    frontend supplies identical t/h/w positions for text-only cells, making
+    this numerically identical to 1-D RoPE while exercising the real M-RoPE
+    dataflow (sectioned frequency/position pairing).
+    """
+    import numpy as np
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                               # (D/2,)
+    # Split D/2 frequency slots across the three position streams (static).
+    assert sum(sections) == D // 2, (sections, D)
+    stream = np.repeat(np.arange(3), np.asarray(sections))     # (D/2,)
+    pos = jnp.take(positions.astype(jnp.float32), jnp.asarray(stream), axis=-1)
+    ang = pos * freqs[None, None, :]                           # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU-style gated)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, dtype, gated: bool = True) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": dense_init(k1, d, d_ff, dtype),
+         "wo": dense_init(k3, d_ff, d, dtype)}
+    if gated:
+        p["wg"] = dense_init(k2, d, d_ff, dtype)
+    return p
+
+
+def mlp_fwd(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    # x: (B, S, d); gated (SwiGLU-style) when "wg" present, classic otherwise
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = act_fn(act)(g) * h
+    else:
+        h = act_fn(act)(h)
+    h = lshard(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

@@ -1,0 +1,32 @@
+"""Model registry — resolves an ArchConfig into the functional model API."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init_params: Callable
+    forward: Callable
+    decode_step: Callable
+    init_cache: Callable
+    loss: Callable
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.float32: tf.init_params(key, cfg, dtype),
+        forward=lambda p, batch, **kw: tf.forward(p, cfg, batch, **kw),
+        decode_step=lambda p, tokens, cache: tf.decode_step(p, cfg, tokens, cache),
+        init_cache=lambda batch, max_seq, dtype=jnp.bfloat16: tf.init_cache(
+            cfg, batch, max_seq, dtype),
+        loss=lambda p, batch: tf.lm_loss(p, cfg, batch),
+    )

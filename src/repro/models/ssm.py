@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD) block in pure JAX — chunked parallel scan for train/prefill,
+O(1)-state recurrence for decode.
+
+TPU adaptation: the SSD "chunked" algorithm maps to MXU-friendly einsums
+(intra-chunk quadratic + inter-chunk state recurrence via lax.scan with a
+(heads, head_dim, state) carry).  Chunk length is a config knob
+(``ssm_chunk``; multiples of 128 keep the MXU aligned).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import lshard
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+CONV_K = 4  # depthwise causal conv kernel width (mamba2 default)
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or max(1, d_inner // 64)
+    return d_inner, nh, d_inner // nh
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, nh, _ = ssm_dims(cfg)
+    ds = cfg.ssm_state
+    conv_dim = d_inner + 2 * ds
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": dense_init(k1, d, 2 * d_inner + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(k2, (CONV_K, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),     # softplus ~0.12
+        "w_out": dense_init(k3, d_inner, d, dtype),
+        "norm_g": jnp.zeros((d_inner,), dtype),            # gated RMSNorm gain
+    }
+
+
+def _split_proj(p: Params, u: jax.Array, cfg: ArchConfig):
+    d_inner, nh, _ = ssm_dims(cfg)
+    ds = cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * ds], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None):
+    """Depthwise causal conv, kernel CONV_K. xbc: (B,S,C); state: (B,K-1,C)."""
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], CONV_K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)               # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):, :]
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable lower-triangular cumulative sums: out[..., i, j] = sum_{j<k<=i} x_k."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """SSD parallel form.
+
+    x: (b, S, nh, p); dt: (b, S, nh); A: (nh,) negative; B, C: (b, S, ds).
+    Returns y (b, S, nh, p) and final state (b, nh, p, ds).
+    """
+    b, S, nh, p = x.shape
+    ds = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    r = lambda t: t.reshape(b, nc, chunk, *t.shape[2:])
+    xc, dtc = r(x), r(dt)
+    Bc, Cc = r(B), r(C)
+
+    dA = dtc * A[None, None, None, :]                     # (b,nc,Q,nh)
+    dA = jnp.transpose(dA, (0, 1, 3, 2))                  # (b,nc,nh,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # -- intra-chunk (quadratic, masked) --
+    L = jnp.exp(_segsum(dA))                              # (b,nc,nh,Q,Q)
+    CB = jnp.einsum("bcqs,bcks->bcqk", Cc, Bc)            # (b,nc,Q,Q)
+    gates = L * CB[:, :, None, :, :]
+    xdt = xc * dtc[..., None]                             # (b,nc,Q,nh,p)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", gates, xdt)
+
+    # -- chunk states --
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)       # (b,nc,nh,Q)
+    states = jnp.einsum("bcqs,bchq,bcqhp->bchps", Bc, decay_states, xdt)
+
+    # -- inter-chunk recurrence --
+    chunk_decay = jnp.exp(dA_cs[..., -1])                 # (b,nc,nh)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, ds), jnp.float32)
+
+    def step(h, inp):
+        cd, st = inp
+        h_new = h * cd[..., None, None] + st
+        return h_new, h
+    sc = jnp.moveaxis(states.astype(jnp.float32), 1, 0)
+    cd = jnp.moveaxis(chunk_decay.astype(jnp.float32), 1, 0)
+    h_last, h_prevs = jax.lax.scan(step, h0, (cd, sc))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (b,nc,nh,p,ds)
+
+    # -- state -> output --
+    state_decay = jnp.exp(dA_cs)                          # (b,nc,nh,Q)
+    y_off = jnp.einsum("bcqs,bchps,bchq->bcqhp", Cc,
+                       h_prevs.astype(x.dtype), state_decay.astype(x.dtype))
+    y = (y_diag + y_off).reshape(b, S, nh, p)
+    return y, h_last
+
+
+def mamba2_fwd(p: Params, u: jax.Array, cfg: ArchConfig,
+               state: Dict = None) -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward. u: (B, S, d). state: optional initial state."""
+    d_inner, nh, hp = ssm_dims(cfg)
+    ds = cfg.ssm_state
+    z, xbc, dt = _split_proj(p, u, cfg)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    x = lshard(x, "batch", "seq", "ssm_inner")
+    bsz, S, _ = x.shape
+    x = x.reshape(bsz, S, nh, hp)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    h0 = None if state is None else state["ssm"]
+    # pad S to a chunk multiple with dt=0 (identity transition, zero input)
+    chunk = min(cfg.ssm_chunk, max(8, S)) if S < cfg.ssm_chunk else cfg.ssm_chunk
+    Sp = -(-S // chunk) * chunk
+    if Sp != S:
+        padw = ((0, 0), (0, Sp - S))
+        x = jnp.pad(x, padw + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, padw + ((0, 0),))
+        B = jnp.pad(B, padw + ((0, 0),))
+        C = jnp.pad(C, padw + ((0, 0),))
+    y, h_last = ssd_chunked(x.astype(jnp.float32), dt, A,
+                            B.astype(jnp.float32), C.astype(jnp.float32),
+                            chunk, h0)
+    y = y[:, :S]
+    x = x[:, :S]
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, S, d_inner).astype(u.dtype)
+    # gated RMSNorm (mamba2 norm before out-proj)
+    y = _gated_rmsnorm(y, z, p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"ssm": h_last, "conv": new_conv}
+
+
+def mamba2_decode(p: Params, u: jax.Array, cfg: ArchConfig,
+                  state: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent step. u: (B, 1, d)."""
+    d_inner, nh, hp = ssm_dims(cfg)
+    ds = cfg.ssm_state
+    z, xbc, dt = _split_proj(p, u, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    bsz = x.shape[0]
+    x = x.reshape(bsz, nh, hp).astype(jnp.float32)
+    B_, C_ = B[:, 0].astype(jnp.float32), C[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                          # (B, nh)
+    h = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bs->bhps", x * dt[..., None], B_)
+    y = jnp.einsum("bhps,bs->bhp", h, C_) + x * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_g"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"ssm": h, "conv": new_conv}
+
+
+def _gated_rmsnorm(y, z, gain, eps):
+    dt = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * (1.0 + gain.astype(jnp.float32))).astype(dt)
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    d_inner, nh, hp = ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, hp, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner + 2 * cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,463 @@
+"""Model stacks for all assigned families.
+
+Layer parameters are *stacked* (leading L axis) and executed with
+``jax.lax.scan`` so the traced HLO contains a single layer body regardless of
+depth — essential to keep 61-layer/1T-param dry-run compiles tractable and to
+keep live-HLO size O(1) in depth.
+
+Public entry points (see ``registry.build_model``):
+  * ``init_params``   — param pytree (use under ``jax.eval_shape`` for dry-run)
+  * ``forward``       — full-sequence forward (train / prefill), returns
+                        (logits, aux, cache-or-None)
+  * ``decode_step``   — one-token step against a cache
+  * ``init_cache``    — cache pytree for a (batch, max_seq)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgs
+from repro.configs.base import ArchConfig
+from repro.distributed.flags import scan_unroll
+from repro.distributed.rematctx import maybe_remat
+from repro.distributed.sharding import lshard
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import dense_init, embed_init, mlp_fwd, mlp_init, rmsnorm, softcap
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+def init_params(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    if cfg.embed_inputs:
+        p["embed"] = embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+    else:
+        p["in_proj"] = dense_init(keys[0], cfg.d_in, cfg.d_model, dtype)
+        p["embed"] = embed_init(keys[6], cfg.vocab, cfg.d_model, dtype)  # for tokens too (vlm mixed)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    p["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+
+    if cfg.family in (cfgs.DENSE, cfgs.MOE, cfgs.AUDIO, cfgs.VLM):
+        def one_layer(k):
+            k1, k2 = jax.random.split(k)
+            lp = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                  "ln2": jnp.zeros((cfg.d_model,), dtype),
+                  "attn": attn.attn_init(k1, cfg, dtype)}
+            if cfg.is_moe:
+                lp["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+            else:
+                lp["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype,
+                                     cfg.gated_mlp)
+            return lp
+        p["layers"] = jax.vmap(one_layer)(jax.random.split(keys[2], cfg.n_layers))
+    elif cfg.family == cfgs.HYBRID:
+        def one_layer(k):
+            return {"ln": jnp.zeros((cfg.d_model,), dtype),
+                    "mamba": ssm_mod.mamba2_init(k, cfg, dtype)}
+        p["layers"] = jax.vmap(one_layer)(jax.random.split(keys[2], cfg.n_layers))
+        k1, k2 = jax.random.split(keys[3])
+        p["shared_attn"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": attn.attn_init(k1, cfg, dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+    elif cfg.family == cfgs.SSM:
+        blocks = []
+        for i, k in enumerate(jax.random.split(keys[2], cfg.n_layers)):
+            init = (xlstm_mod.slstm_init if i in cfg.slstm_at
+                    else xlstm_mod.mlstm_init)
+            blocks.append({"ln": jnp.zeros((cfg.d_model,), dtype),
+                           "cell": init(k, cfg, dtype)})
+        p["blocks"] = blocks
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ===========================================================================
+# Embedding / head
+# ===========================================================================
+def embed_in(p: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    if "embeds" in batch:
+        x = jnp.einsum("bsi,id->bsd", batch["embeds"].astype(p["in_proj"].dtype),
+                       p["in_proj"])
+    else:
+        x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return lshard(x, "batch", "seq", None)
+
+
+def lm_head(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = softcap(logits, cfg.final_softcap)
+    return lshard(logits, "batch", "seq", "vocab")
+
+
+# ===========================================================================
+# Attention-family stack (dense / moe / audio / vlm)
+# ===========================================================================
+def _per_layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """(L,) int32 — effective window per layer (0 = full)."""
+    if cfg.alt_local_global:
+        w = [cfg.window if (i % 2 == 0) else 0 for i in range(cfg.n_layers)]
+    else:
+        w = [cfg.window] * cfg.n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+def _attn_stack_full(p, cfg, x, positions, build_cache: bool, max_seq: int = 0):
+    """Full-seq layers via lax.scan. Returns (x, aux, cache_kv or None)."""
+    windows = _per_layer_windows(cfg)
+    pos1d = positions if positions.ndim == 2 else positions[..., 0]
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, window = xs
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h, cfg, positions)
+        o = attn.attention(q, k, v, cfg, pos1d, pos1d,
+                           causal=cfg.causal, window=window)
+        x = x + attn.attn_out(lp["attn"], o)
+        x = lshard(x, "batch", "seq", None)
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f, a = moe_mod.moe_ffn(lp["moe"], h2, cfg)
+            aux = aux + a
+        else:
+            f = mlp_fwd(lp["mlp"], h2, cfg.act)
+        x = x + f
+        x = lshard(x, "batch", "seq", None)
+        out = (k, v) if build_cache else None
+        return (x, aux), out
+
+    (x, aux), kv = jax.lax.scan(maybe_remat(body), (x, jnp.float32(0.0)),
+                                (p["layers"], windows),
+                                unroll=True if scan_unroll() else 1)
+    cache = None
+    if build_cache:
+        k_all, v_all = kv                           # (L,B,S,K,hd)
+        S = k_all.shape[2]
+        if max_seq and max_seq > S:
+            padw = ((0, 0), (0, 0), (0, max_seq - S), (0, 0), (0, 0))
+            k_all = jnp.pad(k_all, padw)
+            v_all = jnp.pad(v_all, padw)
+        cache = {"k": lshard(k_all, None, "batch", "kv_seq", "kv_heads", None),
+                 "v": lshard(v_all, None, "batch", "kv_seq", "kv_heads", None),
+                 "pos": jnp.int32(S)}
+    return x, aux, cache
+
+
+def _attn_stack_decode(p, cfg, x, cache):
+    """One-token decode via lax.scan over layers + stacked cache."""
+    windows = _per_layer_windows(cfg)
+    pos = cache["pos"]                              # scalar int32
+    B = x.shape[0]
+    if cfg.mrope:
+        positions = jnp.broadcast_to(pos, (B, 1))[..., None].repeat(3, -1)
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1))
+
+    def body(x, xs):
+        lp, window, kc, vc = xs
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        o = attn.decode_attention(q, kc, vc, cfg,
+                                  jnp.broadcast_to(pos + 1, (B,)), window=window)
+        x = x + attn.attn_out(lp["attn"], o)
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f, _ = moe_mod.moe_ffn(lp["moe"], h2, cfg)
+        else:
+            f = mlp_fwd(lp["mlp"], h2, cfg.act)
+        return x + f, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (p["layers"], windows, cache["k"], cache["v"]),
+        unroll=True if scan_unroll() else 1)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return x, new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.int32(0)}
+
+
+# ===========================================================================
+# Hybrid stack (Zamba2: mamba2 layers + shared attention block)
+# ===========================================================================
+def _shared_attn_apply(sp, cfg, x, positions, kv_cache, pos):
+    """Apply the shared attn+MLP block. kv_cache None => full-seq mode."""
+    pos1d = positions if positions.ndim == 2 else positions[..., 0]
+    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    if kv_cache is None:
+        q, k, v = attn.qkv_proj(sp["attn"], h, cfg, positions)
+        o = attn.attention(q, k, v, cfg, pos1d, pos1d)
+        new_kv = (k, v)
+    else:
+        kc, vc = kv_cache
+        q, k, v = attn.qkv_proj(sp["attn"], h, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        B = x.shape[0]
+        o = attn.decode_attention(q, kc, vc, cfg,
+                                  jnp.broadcast_to(pos + 1, (B,)))
+        new_kv = (kc, vc)
+    x = x + attn.attn_out(sp["attn"], o)
+    h2 = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    return x + mlp_fwd(sp["mlp"], h2, cfg.act), new_kv
+
+
+def n_attn_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def _hybrid_full(p, cfg, x, positions, build_cache: bool, max_seq: int = 0):
+    L = cfg.n_layers
+    B, S, _ = x.shape
+    apps = n_attn_apps(cfg)
+    is_attn = jnp.asarray(
+        [1 if (i + 1) % cfg.attn_every == 0 else 0 for i in range(L)], jnp.int32)
+    app_idx = jnp.asarray(
+        [(i + 1) // cfg.attn_every - 1 if (i + 1) % cfg.attn_every == 0 else 0
+         for i in range(L)], jnp.int32)
+
+    kv_shape = (apps, B, max_seq or S, cfg.n_kv_heads, cfg.hd)
+
+    def body(carry, xs):
+        # training mode carries only x — the KV buffers are threaded solely
+        # when a cache is being built (prefill), saving ~12 GiB/device on the
+        # zamba2 train cell (measured via memory_analysis).
+        x, kc_all, vc_all = carry if build_cache else (carry, None, None)
+        lp, flag, aidx = xs
+        h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+        m_out, st = ssm_mod.mamba2_fwd(lp["mamba"], h, cfg, None)
+        x = x + m_out
+        x = lshard(x, "batch", "seq", None)
+
+        def do_attn(op):
+            x, kc_all, vc_all = op
+            x2, (k, v) = _shared_attn_apply(p["shared_attn"], cfg, x,
+                                            positions, None, None)
+            if kc_all is None:
+                return x2, None, None
+            if max_seq and max_seq > S:
+                k = jnp.pad(k, ((0, 0), (0, max_seq - S), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, max_seq - S), (0, 0), (0, 0)))
+            kc_all = jax.lax.dynamic_update_slice_in_dim(kc_all, k[None], aidx, 0)
+            vc_all = jax.lax.dynamic_update_slice_in_dim(vc_all, v[None], aidx, 0)
+            return x2, kc_all, vc_all
+
+        x, kc_all, vc_all = jax.lax.cond(flag == 1, do_attn, lambda op: op,
+                                         (x, kc_all, vc_all))
+        new_carry = (x, kc_all, vc_all) if build_cache else x
+        return new_carry, (st["ssm"], st["conv"])
+
+    if build_cache:
+        carry0 = (x, jnp.zeros(kv_shape, x.dtype), jnp.zeros(kv_shape, x.dtype))
+    else:
+        carry0 = x
+    carry, (ssm_st, conv_st) = jax.lax.scan(
+        maybe_remat(body), carry0, (p["layers"], is_attn, app_idx),
+        unroll=True if scan_unroll() else 1)
+    cache = None
+    if build_cache:
+        x, kc, vc = carry
+        cache = {"attn_k": kc, "attn_v": vc, "ssm": ssm_st, "conv": conv_st,
+                 "pos": jnp.int32(S)}
+    else:
+        x = carry
+    return x, jnp.float32(0.0), cache
+
+
+def _hybrid_decode(p, cfg, x, cache):
+    L = cfg.n_layers
+    B = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    is_attn = jnp.asarray(
+        [1 if (i + 1) % cfg.attn_every == 0 else 0 for i in range(L)], jnp.int32)
+    app_idx = jnp.asarray(
+        [(i + 1) // cfg.attn_every - 1 if (i + 1) % cfg.attn_every == 0 else 0
+         for i in range(L)], jnp.int32)
+
+    def body(carry, xs):
+        x, kc_all, vc_all = carry
+        lp, flag, aidx, sst, cst = xs
+        h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+        m_out, st = ssm_mod.mamba2_decode(lp["mamba"], h, cfg,
+                                          {"ssm": sst, "conv": cst})
+        x = x + m_out
+
+        def do_attn(op):
+            x, kc_all, vc_all = op
+            kc = jax.lax.dynamic_index_in_dim(kc_all, aidx, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vc_all, aidx, 0, keepdims=False)
+            x2, (kc, vc) = _shared_attn_apply(p["shared_attn"], cfg, x,
+                                              positions, (kc, vc), pos)
+            kc_all = jax.lax.dynamic_update_slice_in_dim(kc_all, kc[None], aidx, 0)
+            vc_all = jax.lax.dynamic_update_slice_in_dim(vc_all, vc[None], aidx, 0)
+            return x2, kc_all, vc_all
+
+        x, kc_all, vc_all = jax.lax.cond(flag == 1, do_attn, lambda op: op,
+                                         (x, kc_all, vc_all))
+        return (x, kc_all, vc_all), (st["ssm"], st["conv"])
+
+    (x, kc, vc), (ssm_st, conv_st) = jax.lax.scan(
+        body, (x, cache["attn_k"], cache["attn_v"]),
+        (p["layers"], is_attn, app_idx, cache["ssm"], cache["conv"]),
+        unroll=True if scan_unroll() else 1)
+    new_cache = {"attn_k": kc, "attn_v": vc, "ssm": ssm_st, "conv": conv_st,
+                 "pos": pos + 1}
+    return x, new_cache
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Dict:
+    d_inner, nh, hp = ssm_mod.ssm_dims(cfg)
+    apps = n_attn_apps(cfg)
+    return {
+        "attn_k": jnp.zeros((apps, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "attn_v": jnp.zeros((apps, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, nh, hp, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, ssm_mod.CONV_K - 1,
+                           d_inner + 2 * cfg.ssm_state), jnp.float32),
+        "pos": jnp.int32(0),
+    }
+
+
+# ===========================================================================
+# xLSTM stack (unrolled; 12 small layers)
+# ===========================================================================
+def _xlstm_full(p, cfg, x, build_cache: bool):
+    states = []
+    for i, blk in enumerate(p["blocks"]):
+        h = rmsnorm(x, blk["ln"], cfg.norm_eps)
+        if i in cfg.slstm_at:
+            out, st = xlstm_mod.slstm_fwd(blk["cell"], h, cfg, None)
+        else:
+            out, st = xlstm_mod.mlstm_fwd(blk["cell"], h, cfg, None)
+        x = x + out
+        states.append(st)
+    cache = {"states": states, "pos": jnp.int32(x.shape[1])} if build_cache else None
+    return x, jnp.float32(0.0), cache
+
+
+def _xlstm_decode(p, cfg, x, cache):
+    new_states = []
+    for i, (blk, st) in enumerate(zip(p["blocks"], cache["states"])):
+        h = rmsnorm(x, blk["ln"], cfg.norm_eps)
+        if i in cfg.slstm_at:
+            out, st2 = xlstm_mod.slstm_decode(blk["cell"], h, cfg, st)
+        else:
+            out, st2 = xlstm_mod.mlstm_decode(blk["cell"], h, cfg, st)
+        x = x + out
+        new_states.append(st2)
+    return x, {"states": new_states, "pos": cache["pos"] + 1}
+
+
+def init_xlstm_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype) -> Dict:
+    states = []
+    for i in range(cfg.n_layers):
+        if i in cfg.slstm_at:
+            states.append(xlstm_mod.slstm_init_state(cfg, batch))
+        else:
+            states.append(xlstm_mod.mlstm_init_state(cfg, batch))
+    return {"states": states, "pos": jnp.int32(0)}
+
+
+# ===========================================================================
+# Public API
+# ===========================================================================
+def default_positions(cfg: ArchConfig, batch: int, seq: int) -> jax.Array:
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    if cfg.mrope:
+        pos = pos[..., None].repeat(3, axis=-1)    # stub: t=h=w positions
+    return pos
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            build_cache: bool = False, max_seq: int = 0):
+    """Full-sequence forward. Returns (logits, aux_loss, cache|None)."""
+    x = embed_in(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    if cfg.family in (cfgs.DENSE, cfgs.MOE, cfgs.AUDIO, cfgs.VLM):
+        x, aux, cache = _attn_stack_full(params, cfg, x, positions,
+                                         build_cache, max_seq)
+    elif cfg.family == cfgs.HYBRID:
+        x, aux, cache = _hybrid_full(params, cfg, x, positions,
+                                     build_cache, max_seq)
+    elif cfg.family == cfgs.SSM:
+        x, aux, cache = _xlstm_full(params, cfg, x, build_cache)
+    else:
+        raise ValueError(cfg.family)
+    return lm_head(params, cfg, x), aux, cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jax.Array, cache):
+    """tokens: (B, 1) int32. Returns (logits (B,1,V), new_cache)."""
+    if cfg.is_encoder:
+        raise ValueError("encoder-only model has no decode step")
+    x = embed_in(params, cfg, {"tokens": tokens})
+    if cfg.family in (cfgs.DENSE, cfgs.MOE, cfgs.VLM):
+        x, cache = _attn_stack_decode(params, cfg, x, cache)
+    elif cfg.family == cfgs.HYBRID:
+        x, cache = _hybrid_decode(params, cfg, x, cache)
+    elif cfg.family == cfgs.SSM:
+        x, cache = _xlstm_decode(params, cfg, x, cache)
+    else:
+        raise ValueError(cfg.family)
+    return lm_head(params, cfg, x), cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    if cfg.family in (cfgs.DENSE, cfgs.MOE, cfgs.VLM):
+        return init_attn_cache(cfg, batch, max_seq, dtype)
+    if cfg.family == cfgs.HYBRID:
+        return init_hybrid_cache(cfg, batch, max_seq, dtype)
+    if cfg.family == cfgs.SSM:
+        return init_xlstm_cache(cfg, batch, max_seq, dtype)
+    raise ValueError(cfg.family)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token CE in fp32. logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux, _ = forward(params, cfg, batch)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}

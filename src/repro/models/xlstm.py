@@ -1,0 +1,267 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, exponential gating)
+and sLSTM (scalar memory, exponential gating with stabilizer).
+
+mLSTM is computed in a *chunkwise* parallel form (GLA/SSD-style): intra-chunk
+quadratic attention-like term + inter-chunk (C, n, m) recurrence — the TPU
+adaptation of the paper's "parallel stabilized" formulation.  sLSTM is a true
+sequential recurrence (its recurrent matrix R makes it non-associative) and
+runs as lax.scan over time; the assignment's xlstm-125m places sLSTM in 2/12
+blocks so this does not dominate.
+
+All gating/stabilizer math runs in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    d_inner = 2 * cfg.d_model
+    return d_inner, d_inner // cfg.n_heads
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_inner, dtype),     # [u, z-gate]
+        "wq": dense_init(ks[1], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[2], d_inner, d_inner, dtype),
+        "wv": dense_init(ks[3], d_inner, d_inner, dtype),
+        "w_if": dense_init(ks[4], d_inner, 2 * H, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "norm_g": jnp.zeros((d_inner,), dtype),
+        "w_down": dense_init(ks[5], d_inner, d, dtype),
+    }
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    _, dh = mlstm_dims(cfg)
+    H = cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_gates(p: Params, u: jax.Array, H: int):
+    """u: (B, S, d_inner) -> log_i, log_f each (B, S, H), fp32."""
+    raw = jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    i_raw, f_raw = jnp.split(raw, 2, axis=-1)
+    log_i = i_raw                                   # exponential input gate
+    log_f = -jax.nn.softplus(-f_raw)                # log sigmoid(f_raw)
+    return log_i, log_f
+
+
+def _heads(x: jax.Array, H: int) -> jax.Array:
+    B, S, E = x.shape
+    return x.reshape(B, S, H, E // H).transpose(0, 2, 1, 3)   # (B,H,S,dh)
+
+
+def mlstm_cell_chunked(q, k, v, log_i, log_f, state, chunk: int):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: (B,H,S,dh) fp32; log_i/log_f: (B,S,H) fp32.
+    Returns h (B,H,S,dh) and final state {C,n,m}.
+    """
+    B, H, S, dh = q.shape
+    nc = S // chunk
+    assert nc * chunk == S
+    scale = 1.0 / math.sqrt(dh)
+    li = jnp.moveaxis(log_i, -1, 1).reshape(B, H, nc, chunk)
+    lf = jnp.moveaxis(log_f, -1, 1).reshape(B, H, nc, chunk)
+    rc = lambda t: t.reshape(B, H, nc, chunk, dh)
+    qc, kc, vc = rc(q), rc(k), rc(v)
+
+    F = jnp.cumsum(lf, axis=-1)                     # inclusive cumsum of log f
+    Ftot = F[..., -1]                               # (B,H,nc)
+
+    # intra-chunk log decay matrix: D[i,j] = F_i - F_j + li_j  (j <= i)
+    Dm = F[..., :, None] - F[..., None, :] + li[..., None, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Dm = jnp.where(tri, Dm, -jnp.inf)               # (B,H,nc,Q,Q)
+    a_intra = jnp.max(Dm, axis=-1)                  # (B,H,nc,Q)
+
+    def step(carry, xs):
+        C, n, m = carry                             # (B,H,dh,dh),(B,H,dh),(B,H)
+        qi, ki, vi, Fi, Fti, Di, ai, lii = xs
+        qs = qi * scale
+        # stabilizer per position: m_i = max(F_i + m_prev, max_j<=i D_ij)
+        m_pos = jnp.maximum(Fi + m[..., None], ai)              # (B,H,Q)
+        inter_w = jnp.exp(Fi + m[..., None] - m_pos)            # (B,H,Q)
+        intra_w = jnp.exp(Di - m_pos[..., None])                # (B,H,Q,Q)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qs, ki)
+        h_num = (jnp.einsum("bhqk,bhkd->bhqd", s * intra_w, vi)
+                 + jnp.einsum("bhqd,bhde->bhqe", qs, C) * inter_w[..., None])
+        # normalizer vector: n_i = sum_j<=i exp(D_ij - m_i) k_j + carry part
+        n_vec = (jnp.einsum("bhqk,bhkd->bhqd", intra_w, ki)
+                 + n[:, :, None, :] * inter_w[..., None])
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhqd,bhqd->bhq", qs, n_vec)),
+                            jnp.exp(-m_pos))
+        h = h_num / denom[..., None]
+        # chunk-end state update
+        a_end = jnp.max(Fti[..., None] - Fi + lii, axis=-1)     # (B,H)
+        m_end = jnp.maximum(Fti + m, a_end)
+        carry_w = jnp.exp(Fti + m - m_end)                      # (B,H)
+        in_w = jnp.exp(Fti[..., None] - Fi + lii - m_end[..., None])  # (B,H,Q)
+        C_new = (C * carry_w[..., None, None]
+                 + jnp.einsum("bhkd,bhke,bhk->bhde", ki, vi, in_w))
+        n_new = n * carry_w[..., None] + jnp.einsum("bhkd,bhk->bhd", ki, in_w)
+        return (C_new, n_new, m_end), h
+
+    xs = (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
+          jnp.moveaxis(F, 2, 0), jnp.moveaxis(Ftot, 2, 0),
+          jnp.moveaxis(Dm, 2, 0), jnp.moveaxis(a_intra, 2, 0),
+          jnp.moveaxis(li, 2, 0))
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, S, dh)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_fwd(p: Params, x: jax.Array, cfg: ArchConfig,
+              state: Dict = None) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d) -> (out, state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    d_inner, dh = mlstm_dims(cfg)
+    u, z = jnp.split(jnp.einsum("bsd,de->bse", x, p["w_up"]), 2, axis=-1)
+    q = _heads(jnp.einsum("bse,ef->bsf", u, p["wq"]), H).astype(jnp.float32)
+    k = _heads(jnp.einsum("bse,ef->bsf", u, p["wk"]), H).astype(jnp.float32)
+    v = _heads(jnp.einsum("bse,ef->bsf", u, p["wv"]), H).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, u, H)
+    st = state or mlstm_init_state(cfg, B)
+    chunk = min(cfg.ssm_chunk or 128, S)
+    # pad S to a chunk multiple: log_i=-inf (no input), log_f=0 (no decay)
+    Sp = -(-S // chunk) * chunk
+    if Sp != S:
+        pq = ((0, 0), (0, 0), (0, Sp - S), (0, 0))
+        q, k, v = jnp.pad(q, pq), jnp.pad(k, pq), jnp.pad(v, pq)
+        log_i = jnp.pad(log_i, ((0, 0), (0, Sp - S), (0, 0)),
+                        constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, Sp - S), (0, 0)))
+    h, new_state = mlstm_cell_chunked(q, k, v, log_i, log_f, st, chunk)
+    h = h[:, :, :S]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d_inner)
+    h = _rms(h, p["norm_g"], cfg.norm_eps) * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["w_down"]), new_state
+
+
+def mlstm_decode(p: Params, x: jax.Array, cfg: ArchConfig,
+                 state: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-step recurrent mLSTM. x: (B, 1, d)."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    d_inner, dh = mlstm_dims(cfg)
+    scale = 1.0 / math.sqrt(dh)
+    u, z = jnp.split(jnp.einsum("bsd,de->bse", x, p["w_up"]), 2, axis=-1)
+    q = _heads(jnp.einsum("bse,ef->bsf", u, p["wq"]), H)[:, :, 0].astype(jnp.float32)
+    k = _heads(jnp.einsum("bse,ef->bsf", u, p["wk"]), H)[:, :, 0].astype(jnp.float32)
+    v = _heads(jnp.einsum("bse,ef->bsf", u, p["wv"]), H)[:, :, 0].astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, u, H)
+    li, lf = log_i[:, 0], log_f[:, 0]                         # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)[..., None]
+    iw = jnp.exp(li - m_new)[..., None]
+    C = C * fw[..., None] + jnp.einsum("bhd,bhe->bhde", k, v) * iw[..., None]
+    n = n * fw + k * iw
+    num = jnp.einsum("bhd,bhde->bhe", q, C) * scale
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)) * scale,
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, d_inner)
+    h = _rms(h, p["norm_g"], cfg.norm_eps) * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["w_down"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def _rms(x, gain, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return x32 * jax.lax.rsqrt(var + eps) * (1.0 + gain.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    d_ff = int(4 * d * 4 / 3 / 2) * 2
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, jnp.float32),   # i,f,z,o
+        "r_gates": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+                    / math.sqrt(dh)),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "norm_g": jnp.zeros((d,), dtype),
+        "w_ff1": dense_init(ks[2], d, 2 * d_ff, dtype),
+        "w_ff2": dense_init(ks[3], d_ff, d, dtype),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.full((batch, d), 1e-6, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def _slstm_step(p: Params, H: int, carry, wx_t):
+    """wx_t: (B, 4d) pre-computed input projection at step t."""
+    c, n, h, m = carry
+    B, d = c.shape
+    dh = d // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r_gates"]).reshape(B, 4 * d)
+    raw = wx_t + rec + p["b_gates"]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(raw, 4, axis=-1)
+    log_i = i_raw
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m, log_i)
+    iw = jnp.exp(log_i - m_new)
+    fw = jnp.exp(log_f + m - m_new)
+    c_new = fw * c + iw * jnp.tanh(z_raw)
+    n_new = fw * n + iw
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_fwd(p: Params, x: jax.Array, cfg: ArchConfig,
+              state: Dict = None) -> Tuple[jax.Array, Dict]:
+    """x: (B, S, d). Sequential lax.scan over time."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    st = state or slstm_init_state(cfg, B)
+    wx = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["w_gates"])
+    carry = (st["c"], st["n"], st["h"], st["m"])
+    carry, hs = jax.lax.scan(
+        lambda c, w: _slstm_step(p, H, c, w), carry, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)                                 # (B,S,d)
+    h = _rms(h, p["norm_g"], cfg.norm_eps).astype(x.dtype)
+    # gated FFN (pf = 4/3)
+    a, b = jnp.split(jnp.einsum("bsd,df->bsf", h, p["w_ff1"]), 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(a) * b, p["w_ff2"])
+    new_state = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return out, new_state
+
+
+def slstm_decode(p: Params, x: jax.Array, cfg: ArchConfig,
+                 state: Dict) -> Tuple[jax.Array, Dict]:
+    return slstm_fwd(p, x, cfg, state)

@@ -1,0 +1,68 @@
+"""Peregrine control-plane service: the middlebox-server side of the paper.
+
+Consumes packet batches (what the switch would forward), runs the data-plane
+feature pipeline, emits per-epoch feature records, and scores them with
+KitNET — the full §3.2 workflow as one object.  Tracks the running packet
+count so epochs are continuous across batches, and keeps flow-table state
+warm between calls (exactly the switch's persistent registers).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import init_state, process_parallel, process_serial
+from repro.core.records import epoch_indices
+from repro.detection.kitnet import KitNet, score_kitnet, train_kitnet
+from repro.traffic.generator import to_jnp
+
+
+class DetectionService:
+    def __init__(self, epoch: int = 1024, n_slots: int = 8192,
+                 mode: str = "exact", threshold: Optional[float] = None):
+        self.epoch = epoch
+        self.mode = mode
+        self.state = init_state(n_slots)
+        self.net: Optional[KitNet] = None
+        self.threshold = threshold
+        self.pkt_count = 0
+        self._train_feats = []
+
+    # ---- data-plane step (would run on the switch) ----
+    def _fc(self, pkts: Dict[str, np.ndarray]) -> np.ndarray:
+        pk = to_jnp(pkts)
+        if self.mode == "exact":
+            self.state, feats = process_parallel(self.state, pk)
+        else:
+            self.state, feats = process_serial(self.state, pk, mode=self.mode)
+        return np.asarray(feats)
+
+    # ---- training phase ----
+    def observe_benign(self, pkts: Dict[str, np.ndarray]) -> None:
+        feats = self._fc(pkts)
+        idx = epoch_indices(len(feats), self.epoch, self.pkt_count)
+        self.pkt_count += len(feats)
+        if len(idx):
+            self._train_feats.append(feats[idx])
+
+    def fit(self, seed: int = 0, fpr: float = 0.01) -> None:
+        train = np.concatenate(self._train_feats)
+        self.net = train_kitnet(train, seed=seed)
+        scores = score_kitnet(self.net, train)
+        if self.threshold is None:
+            self.threshold = float(np.quantile(scores, 1.0 - fpr))
+        self._train_feats = []
+
+    # ---- inference phase ----
+    def process(self, pkts: Dict[str, np.ndarray]
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (record_indices, rmse_scores, alarms)."""
+        assert self.net is not None, "call fit() first"
+        feats = self._fc(pkts)
+        idx = epoch_indices(len(feats), self.epoch, self.pkt_count)
+        self.pkt_count += len(feats)
+        if not len(idx):
+            return idx, np.zeros((0,)), np.zeros((0,), bool)
+        scores = score_kitnet(self.net, feats[idx])
+        return idx, scores, scores > self.threshold

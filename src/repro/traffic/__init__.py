@@ -1,0 +1,3 @@
+from repro.traffic.generator import (  # noqa: F401
+    ATTACKS, synth_trace, benign_trace, attack_trace, to_jnp,
+)

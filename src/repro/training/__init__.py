@@ -1,0 +1,4 @@
+from repro.training.optim import make_optimizer  # noqa: F401
+from repro.training.train_step import make_train_step, init_train_state  # noqa: F401
+from repro.training.checkpoint import CheckpointManager  # noqa: F401
+from repro.training.rematctx import use_remat, current_remat  # noqa: F401

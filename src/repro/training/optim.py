@@ -1,0 +1,141 @@
+"""Hand-rolled optimizers (no optax in this environment).
+
+Each optimizer is an (init, update) pair over arbitrary param pytrees.
+AdamW is the default; Adafactor provides the low-memory option used by the
+kimi-k2 trillion-parameter cell (factored second moment: O(n+m) state per
+matrix instead of O(n*m)).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params, dtype) -> Dict:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return {"m": _tmap(z, params), "v": _tmap(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, params, tc: TrainConfig, lr):
+    step = opt_state["step"] + 1
+    b1, b2 = tc.beta1, tc.beta2
+    m = _tmap(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                             + (1 - b1) * g.astype(jnp.float32)
+                             ).astype(m_.dtype), opt_state["m"], grads)
+    v = _tmap(lambda v_, g: (b2 * v_.astype(jnp.float32)
+                             + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                             ).astype(v_.dtype), opt_state["v"], grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        mh = m_.astype(jnp.float32) / c1
+        vh = v_.astype(jnp.float32) / c2
+        delta = mh / (jnp.sqrt(vh) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = _tmap(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum) — Shazeer & Stern 2018
+# ---------------------------------------------------------------------------
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params, dtype) -> Dict:
+    def zrow(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def zcol(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+    return {"vr": _tmap(zrow, params), "vc": _tmap(zcol, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, opt_state, params, tc: TrainConfig, lr):
+    step = opt_state["step"] + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + 1e-30
+        if _factored(p.shape):
+            vr2 = beta2 * vr + (1 - beta2) * g2.mean(-1)
+            vc2 = beta2 * vc + (1 - beta2) * g2.mean(-2)
+            denom = (vr2[..., None] / jnp.maximum(
+                vr2.mean(-1, keepdims=True)[..., None], 1e-30)) * vc2[..., None, :]
+            u = g / jnp.sqrt(jnp.maximum(denom, 1e-30))
+        else:
+            vr2 = beta2 * vr + (1 - beta2) * g2
+            vc2 = vc
+            u = g / jnp.sqrt(jnp.maximum(vr2, 1e-30))
+        # relative-scale update clipping
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u)
+        scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(
+            p.astype(jnp.float32)))), 1e-3)
+        new_p = (p.astype(jnp.float32) - lr * scale * u
+                 - lr * tc.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), vr2, vc2
+
+    out = _tmap(upd, params, grads, opt_state["vr"], opt_state["vc"])
+    leaves, treedef = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_params = treedef.unflatten([l[0] for l in leaves])
+    vr = treedef.unflatten([l[1] for l in leaves])
+    vc = treedef.unflatten([l[2] for l in leaves])
+    return new_params, {"vr": vr, "vc": vc, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum-free, for small ablations)
+# ---------------------------------------------------------------------------
+def sgd_init(params, dtype) -> Dict:
+    return {"step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(grads, opt_state, params, tc: TrainConfig, lr):
+    new_params = _tmap(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)
+    return new_params, {"step": opt_state["step"] + 1}
+
+
+def make_optimizer(tc: TrainConfig) -> Tuple[Callable, Callable]:
+    dtype = jnp.dtype(tc.opt_state_dtype)
+    if tc.optimizer == "adamw":
+        return (lambda p: adamw_init(p, dtype),
+                lambda g, s, p, lr: adamw_update(g, s, p, tc, lr))
+    if tc.optimizer == "adafactor":
+        return (lambda p: adafactor_init(p, dtype),
+                lambda g, s, p, lr: adafactor_update(g, s, p, tc, lr))
+    if tc.optimizer == "sgd":
+        return (lambda p: sgd_init(p, dtype),
+                lambda g, s, p, lr: sgd_update(g, s, p, tc, lr))
+    raise ValueError(tc.optimizer)
+
+
+def lr_schedule(tc: TrainConfig, step) -> jnp.ndarray:
+    """Linear warmup then inverse-sqrt decay."""
+    s = jnp.maximum(step.astype(jnp.float32), 1.0)
+    warm = tc.learning_rate * s / max(tc.warmup_steps, 1)
+    decay = tc.learning_rate * jnp.sqrt(max(tc.warmup_steps, 1) / s)
+    return jnp.where(s < tc.warmup_steps, warm, decay)

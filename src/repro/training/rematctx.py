@@ -1,0 +1,3 @@
+from repro.distributed.rematctx import (  # noqa: F401
+    use_remat, current_remat, maybe_remat,
+)

@@ -1,0 +1,152 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arith
+from repro.core.parallel import seg_last_scan, seg_linear_scan
+from repro.core.records import epoch_indices
+from repro.detection.metrics import auc
+
+SETT = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# segmented linear scan == serial recurrence
+# ---------------------------------------------------------------------------
+@settings(**SETT)
+@given(st.integers(2, 40), st.integers(1, 5), st.integers(0, 10 ** 6))
+def test_seg_linear_scan_matches_serial(n, n_segs, seed):
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, n_segs, n))
+    start = np.r_[True, seg[1:] != seg[:-1]]
+    delta = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    x = rng.uniform(-2, 2, n).astype(np.float32)
+    got = np.asarray(seg_linear_scan(jnp.asarray(start),
+                                     jnp.asarray(delta), jnp.asarray(x)))
+    want = np.zeros(n, np.float32)
+    acc = 0.0
+    for i in range(n):
+        acc = x[i] if start[i] else delta[i] * acc + x[i]
+        want[i] = acc
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)
+
+
+@settings(**SETT)
+@given(st.integers(2, 40), st.integers(1, 4), st.integers(0, 10 ** 6))
+def test_seg_last_scan_matches_serial(n, n_segs, seed):
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, n_segs, n))
+    start = np.r_[True, seg[1:] != seg[:-1]]
+    valid = rng.random(n) < 0.5
+    val = rng.uniform(-1, 1, n).astype(np.float32)
+    found, got = seg_last_scan(jnp.asarray(start), jnp.asarray(valid),
+                               jnp.asarray(val))
+    found, got = np.asarray(found), np.asarray(got)
+    last, has = 0.0, False
+    for i in range(n):
+        if start[i]:
+            last, has = 0.0, False
+        if valid[i]:
+            last, has = val[i], True
+        assert found[i] == has
+        if has:
+            assert abs(got[i] - last) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# approximate arithmetic bounds
+# ---------------------------------------------------------------------------
+@settings(**SETT)
+@given(st.floats(1.0, 1e6), st.floats(1.0, 1e6))
+def test_shift_div_within_2x(a, b):
+    """Rounding the divisor to the upper power of two under-estimates by at
+    most 2x (plus the integer floor)."""
+    got = float(arith.shift_div(jnp.float32(a), jnp.float32(b)))
+    exact = a / b
+    assert got <= exact + 1.0
+    assert got >= exact / 2.0 - 1.0
+
+
+@settings(**SETT)
+@given(st.floats(1.0, 1e9))
+def test_mathunit_sqrt_relative_error(x):
+    got = float(arith.mathunit_sqrt(jnp.float32(x)))
+    exact = float(np.sqrt(x))
+    assert abs(got - exact) <= 0.12 * exact + 1.0
+
+
+@settings(**SETT)
+@given(st.floats(0.0, 50.0), st.floats(0.001, 10.0))
+def test_decay_bounds(dt, lam):
+    """Quantised decay brackets the exact decay from above within 2x."""
+    ex = float(arith.exact_decay(lam, jnp.float32(dt)))
+    qd = float(arith.quantized_decay(lam, jnp.float32(dt)))
+    assert 0.0 <= ex <= 1.0 and 0.0 <= qd <= 1.0
+    if lam * dt < 31:
+        assert qd >= ex - 1e-6          # floor(k) halvings decay less
+        assert qd <= ex * 2.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# sampling / metrics
+# ---------------------------------------------------------------------------
+@settings(**SETT)
+@given(st.integers(1, 500), st.integers(1, 64), st.integers(0, 1000))
+def test_epoch_indices_invariants(n, epoch, offset):
+    idx = epoch_indices(n, epoch, offset)
+    assert all(0 <= i < n for i in idx)
+    assert all((i + offset + 1) % epoch == 0 for i in idx)
+    # chunked == one-shot
+    half = n // 2
+    a = list(epoch_indices(half, epoch, offset))
+    b = [i + half for i in epoch_indices(n - half, epoch, offset + half)]
+    assert list(idx) == a + b
+
+
+@settings(**SETT)
+@given(st.integers(2, 100), st.integers(0, 10 ** 6))
+def test_auc_separated_is_one(n, seed):
+    rng = np.random.default_rng(seed)
+    neg = rng.uniform(0, 0.4, n)
+    pos = rng.uniform(0.6, 1.0, n)
+    scores = np.r_[neg, pos]
+    labels = np.r_[np.zeros(n), np.ones(n)]
+    assert auc(scores, labels) == 1.0
+    assert auc(-scores, labels) == 0.0
+
+
+@settings(**SETT)
+@given(st.integers(10, 200), st.integers(0, 10 ** 6))
+def test_auc_random_is_half(n, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.uniform(0, 1, 2 * n)
+    labels = np.r_[np.zeros(n), np.ones(n)]
+    a = auc(scores, labels)
+    assert 0.15 < a < 0.85
+
+
+# ---------------------------------------------------------------------------
+# Peregrine pipeline invariance: shifting all timestamps by a constant
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 100))
+def test_time_shift_invariance(seed):
+    from repro.core import init_state, process_parallel
+    rng = np.random.default_rng(seed)
+    n = 60
+    base = {
+        "ts": np.sort(rng.uniform(0, 3, n)).astype(np.float32),
+        "src": rng.integers(0, 4, n).astype(np.uint32),
+        "dst": rng.integers(0, 4, n).astype(np.uint32),
+        "sport": rng.integers(1000, 1004, n).astype(np.uint32),
+        "dport": rng.integers(80, 82, n).astype(np.uint32),
+        "proto": np.full(n, 6, np.uint32),
+        "length": rng.integers(60, 1500, n).astype(np.float32),
+    }
+    st0 = init_state(128)
+    _, f0 = process_parallel(st0, {k: jnp.asarray(v) for k, v in base.items()})
+    shifted = dict(base, ts=base["ts"] + 50.0)
+    _, f1 = process_parallel(st0, {k: jnp.asarray(v) for k, v in shifted.items()})
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1),
+                               rtol=1e-3, atol=1.0)

@@ -1,0 +1,54 @@
+"""End-to-end behaviour of the paper's system (the headline claims, small).
+
+The full-size reproduction lives in benchmarks/ (detection_auc.py etc.);
+these tests assert the *directional* claims cheaply so CI guards them.
+"""
+import numpy as np
+import pytest
+
+from repro.detection.metrics import auc
+from repro.detection.sweep import sweep_attack
+from repro.traffic import synth_trace
+
+
+@pytest.fixture(scope="module")
+def syn_dos_results():
+    data = synth_trace("syn_dos", n_train=6000, n_benign_eval=6000,
+                       n_attack=6000, seed=0)
+    return sweep_attack(data, rates=[1, 256], mode="switch")
+
+
+def test_peregrine_effective_without_sampling(syn_dos_results):
+    assert syn_dos_results["peregrine"][1]["auc"] > 0.8
+
+
+def test_peregrine_robust_under_sampling(syn_dos_results):
+    """The paper's key claim: record sampling preserves detection."""
+    r = syn_dos_results["peregrine"]
+    assert r[256]["auc"] > 0.8
+    assert r[256]["auc"] > r[1]["auc"] - 0.15
+
+
+def test_kitsune_under_sampling_never_beats_peregrine(syn_dos_results):
+    """Fig. 1/7 direction: under sampling the packet-sampled baseline is at
+    best equal, and Peregrine stays effective."""
+    k = syn_dos_results["kitsune"]
+    p = syn_dos_results["peregrine"]
+    assert p[256]["auc"] >= k[256]["auc"] - 0.01, (p[256], k[256])
+    assert p[256]["auc"] > 0.9
+
+
+def test_switch_arithmetic_preserves_detection():
+    """§5.4: approximate switch arithmetic does not break detection."""
+    data = synth_trace("syn_dos", n_train=5000, n_benign_eval=5000,
+                       n_attack=5000, seed=1)
+    exact = sweep_attack(data, rates=[64], mode="exact")
+    sw = sweep_attack(data, rates=[64], mode="switch")
+    assert sw["peregrine"][64]["auc"] > 0.8
+    assert abs(sw["peregrine"][64]["auc"] - exact["peregrine"][64]["auc"]) < 0.15
+
+
+def test_f1_reported_at_both_fprs(syn_dos_results):
+    r = syn_dos_results["peregrine"][1]
+    assert 0.0 <= r["f1_fpr10"] <= 1.0
+    assert 0.0 <= r["f1_fpr01"] <= 1.0
