@@ -13,23 +13,23 @@ import jax
 import numpy as np
 
 from benchmarks.common import save, timeit
-from repro.core import init_state, process_parallel
+from repro.core import compute_features, init_state
 from repro.detection.kitnet import score_kitnet, train_kitnet
 from repro.traffic import ATTACKS, synth_trace, to_jnp
 
 
-def split_for(attack: str, n: int, seed: int = 0):
+def split_for(attack: str, n: int, seed: int = 0, backend: str = "scan"):
     data = synth_trace(attack, n_train=n, n_benign_eval=n // 2,
                        n_attack=n // 2, seed=seed)
     st = init_state(8192)
     pk_tr = to_jnp(data["train"])
     pk_ev = to_jnp(data["eval"])
-    st, f_tr = process_parallel(st, pk_tr)
+    st, f_tr = compute_features(st, pk_tr, backend=backend)
     net = train_kitnet(np.asarray(f_tr)[:2000], seed=seed)
 
     t_fc = timeit(lambda: jax.block_until_ready(
-        process_parallel(st, pk_ev)[1]), reps=3)
-    _, f_ev = process_parallel(st, pk_ev)
+        compute_features(st, pk_ev, backend=backend)[1]), reps=3)
+    _, f_ev = compute_features(st, pk_ev, backend=backend)
     f_ev = np.asarray(f_ev)
     t_md = timeit(lambda: score_kitnet(net, f_ev), reps=3)
     fc_share = t_fc / (t_fc + t_md)
@@ -42,12 +42,14 @@ def split_for(attack: str, n: int, seed: int = 0):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="scan",
+                    help="FC backend name (serial/scan/pallas)")
     args = ap.parse_args()
     attacks = ("syn_dos", "mirai", "ssdp_flood") if args.quick else tuple(ATTACKS)
     n = 6000 if args.quick else 20000
     out = {}
     for a in attacks:
-        out[a] = split_for(a, n)
+        out[a] = split_for(a, n, backend=args.backend)
         print(f"{a:18s} FC={out[a]['fc_share'] * 100:5.1f}%  "
               f"offload speedup={out[a]['offload_speedup']:.2f}x")
     share = np.mean([v["fc_share"] for v in out.values()])

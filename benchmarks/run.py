@@ -41,7 +41,7 @@ def bench_throughput():
     from benchmarks.throughput import fc_rates, md_rate
     fc = fc_rates(n_pkts=8000)
     md = md_rate(n_train=2000, n_score=4096)
-    return (f"fc_parallel_pps={fc['parallel_pps']:.0f};"
+    return (f"fc_scan_pps={fc['scan_pps']:.0f};"
             f"md_rps={md:.0f}")
 
 

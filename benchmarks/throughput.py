@@ -7,55 +7,56 @@ curve:
 
     stable_pps(rate) = min(FC_pps, MD_records_per_s * rate)
 
-FC_pps is measured for three backends: the serial switch-semantics oracle,
-the TPU-native segmented-scan pipeline, and the Pallas feature_update kernel
-(interpret mode; on-TPU this is the line-rate path).  The TPU projection for
-the parallel pipeline is derived from its roofline bytes (see EXPERIMENTS.md
-§Perf — Peregrine pipeline).
+FC_pps is measured per backend through the unified
+``repro.core.backends.compute_features`` API — any registered backend can be
+benchmarked by name (``--backends serial,scan,pallas``):
+
+  * serial — per-packet switch-semantics oracle (lax.scan);
+  * scan   — TPU-native segmented-scan pipeline;
+  * pallas — the full-feature Pallas kernel (interpret mode on CPU; on TPU
+    this is the line-rate path).
+
+The TPU projection for the scan pipeline is derived from its roofline bytes
+(see EXPERIMENTS.md §Perf — Peregrine pipeline).
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import save, timeit
-from repro.core import init_state, process_parallel, process_serial
+from repro.core import (available_backends, compute_features, init_state,
+                        resolve_backend)
 from repro.detection.kitnet import score_kitnet, train_kitnet
-from repro.kernels import ops
 from repro.traffic import synth_trace, to_jnp
-from repro.core.state import packet_slots
+
+import numpy as np
+
+# the serial oracle is orders of magnitude slower per packet: measure it on
+# a truncated stream so the benchmark finishes
+_BACKEND_PKTS = {"serial": 2000, "scan": None, "pallas": 4096}
 
 
-def fc_rates(n_pkts: int = 20000, n_slots: int = 8192):
+def fc_rates(n_pkts: int = 20000, n_slots: int = 8192,
+             backends=("serial", "scan", "pallas")):
     data = synth_trace("mirai", n_train=n_pkts, n_benign_eval=1000,
                        n_attack=1000, seed=0)
     pk = to_jnp(data["train"])
     st = init_state(n_slots)
 
-    t_par = timeit(lambda: jax.block_until_ready(
-        process_parallel(st, pk)[1]), reps=3)
-    par_pps = n_pkts / t_par
-
-    n_serial = 2000
-    pk_s = {k: v[:n_serial] for k, v in pk.items()}
-    t_ser = timeit(lambda: jax.block_until_ready(
-        process_serial(st, pk_s, mode="switch")[1]), reps=1)
-    ser_pps = n_serial / t_ser
-
-    # Pallas kernel (single key-type stream update), interpret mode
-    slots = packet_slots(pk, n_slots)["src_ip"]
-    table = {f: (jnp.zeros((n_slots, 4)) - (1.0 if f == "last_t" else 0.0))
-             for f in ("last_t", "w", "ls", "ss")}
-    n_kern = 4096
-    t_kern = timeit(lambda: jax.block_until_ready(ops.feature_update(
-        table, slots[:n_kern], pk["ts"][:n_kern], pk["length"][:n_kern],
-        chunk=512)[1]), reps=1)
-    kern_pps = n_kern / t_kern
-    return {"parallel_pps": par_pps, "serial_pps": ser_pps,
-            "pallas_interpret_pps": kern_pps}
+    out = {}
+    for name in backends:
+        name = resolve_backend(name)    # alias-proof cap/mode selection
+        cap = _BACKEND_PKTS.get(name)
+        n = n_pkts if cap is None else min(cap, n_pkts)
+        pk_n = {k: v[:n] for k, v in pk.items()}
+        mode = "switch" if name == "serial" else "exact"
+        reps = 3 if name == "scan" else 1
+        t = timeit(lambda: jax.block_until_ready(compute_features(
+            st, pk_n, backend=name, mode=mode)[1]), reps=reps)
+        out[f"{name}_pps"] = n / t
+    return out
 
 
 def md_rate(n_train: int = 4000, n_score: int = 8192):
@@ -70,12 +71,18 @@ def md_rate(n_train: int = 4000, n_score: int = 8192):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backends", default="serial,scan,pallas",
+                    help=f"comma list from {available_backends()}")
     args = ap.parse_args()
     n = 8000 if args.quick else 40000
-    fc = fc_rates(n_pkts=n)
+    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
+    fc = fc_rates(n_pkts=n, backends=backends)
     md = md_rate()
     rates = (1, 64, 1024, 32768)
-    curve = {r: min(fc["parallel_pps"], md * r) for r in rates}
+    # Fig8 pins the curve to the deployable batch pipeline (scan); other
+    # backends are component diagnostics, not FC deployment rates
+    curve_fc = fc.get("scan_pps", max(fc.values()))
+    curve = {r: min(curve_fc, md * r) for r in rates}
     out = {**fc, "md_records_per_s": md,
            "stable_pps_at_rate": curve,
            "note": "on-CPU single-core; Fig8 shape: throughput rises with "

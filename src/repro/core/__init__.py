@@ -7,6 +7,10 @@ from repro.core.state import (  # noqa: F401
 )
 from repro.core.pipeline import process_serial  # noqa: F401
 from repro.core.parallel import process_parallel  # noqa: F401
+from repro.core.backends import (  # noqa: F401
+    available_backends, compute_features, default_backend, register_backend,
+    resolve_backend,
+)
 from repro.core.records import (  # noqa: F401
     epoch_sample, epoch_indices, packet_sample_indices,
 )

@@ -1,0 +1,99 @@
+"""FC backend registry — one API, three interchangeable data planes.
+
+Peregrine's architectural bet is that feature computation is the swappable,
+throughput-critical stage (cf. Whisper's frequency-domain frontend and
+flow-classification pipelines): the detector never cares *how* the 80
+per-packet features were produced.  This module makes that explicit:
+
+    new_state, feats = compute_features(state, pkts, backend="pallas")
+
+Backends (all emit the identical (n, N_FEATURES) layout):
+
+  * ``serial`` — the per-packet lax.scan oracle (core/pipeline.py).  The
+    only backend that also supports ``mode="switch"`` (shift-approximated
+    arithmetic + round-robin decay), which is inherently packet-serial.
+  * ``scan``   — TPU-native segmented associative scans (core/parallel.py),
+    O(log n) depth over a packet batch.  Exact mode only.
+  * ``pallas`` — the full-feature Pallas kernel
+    (kernels/feature_update.feature_update_full): the switch pipeline on a
+    TPU core, flow tables resident in VMEM.  Exact mode only; runs in
+    interpret mode on CPU and compiles on real TPU.
+
+``register_backend`` is the extension point for future sharded/multi-device
+flow-table backends.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+
+# name -> (fn(state, pkts, mode, **kw) -> (state, feats), supported modes)
+_REGISTRY: Dict[str, Tuple[Callable, Tuple[str, ...]]] = {}
+
+# legacy / convenience spellings
+_ALIASES = {"parallel": "scan", "oracle": "serial", "kernel": "pallas"}
+
+
+def register_backend(name: str, modes: Tuple[str, ...] = ("exact",)):
+    """Register ``fn(state, pkts, mode=..., **kw)`` as FC backend ``name``."""
+    def deco(fn):
+        _REGISTRY[name] = (fn, modes)
+        return fn
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(name: str) -> str:
+    """Canonical backend name (alias-aware); raises on unknown names."""
+    name = _ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown FC backend {name!r}; "
+                         f"available: {available_backends()}")
+    return name
+
+
+@register_backend("serial", modes=("exact", "switch"))
+def _serial(state, pkts, mode: str = "exact", **_kw):
+    from repro.core.pipeline import process_serial
+    return process_serial(state, pkts, mode=mode)
+
+
+@register_backend("scan")
+def _scan(state, pkts, mode: str = "exact", **_kw):
+    from repro.core.parallel import process_parallel
+    return process_parallel(state, pkts)
+
+
+@register_backend("pallas")
+def _pallas(state, pkts, mode: str = "exact", chunk: int = 256,
+            interpret=None, **_kw):
+    from repro.kernels import ops
+    return ops.feature_update_full(state, pkts, chunk=chunk,
+                                   interpret=interpret)
+
+
+def compute_features(state: Dict, pkts: Dict[str, jax.Array],
+                     backend: str = "scan", mode: str = "exact",
+                     **kw) -> Tuple[Dict, jax.Array]:
+    """Run one packet batch through the selected FC backend.
+
+    state: ``init_state`` dict; pkts: raw packet arrays.  Returns
+    ``(new_state, feats (n, N_FEATURES))``.  Extra kwargs go to the backend
+    (e.g. ``chunk=``/``interpret=`` for pallas).
+    """
+    name = resolve_backend(backend)
+    fn, modes = _REGISTRY[name]
+    if mode not in modes:
+        raise ValueError(
+            f"FC backend {name!r} does not support mode {mode!r} "
+            f"(supports {modes}); use backend='serial' for switch mode")
+    return fn(state, pkts, mode=mode, **kw)
+
+
+def default_backend(mode: str = "exact") -> str:
+    """The sensible default for a given arithmetic mode."""
+    return "scan" if mode == "exact" else "serial"

@@ -29,14 +29,27 @@ from scipy.cluster.hierarchy import linkage, to_tree
 # Feature mapper
 # ---------------------------------------------------------------------------
 def feature_map(train_feats: np.ndarray, max_size: int = 10) -> List[np.ndarray]:
-    """Cluster feature indices by correlation distance; clusters <= max_size."""
+    """Cluster feature indices by correlation distance; clusters <= max_size.
+
+    Degenerate inputs are handled rather than crashing scipy: fewer than two
+    features yield an empty condensed distance (``linkage`` rejects it), so
+    they fall back to a single cluster; constant/empty traces can produce
+    NaN correlation distances, which are sanitised to the maximum distance
+    before clustering.
+    """
     X = np.asarray(train_feats, np.float64)
     F = X.shape[1]
+    if F < 2:
+        # single (possibly empty) cluster — nothing to hierarchically split
+        return [np.arange(F, dtype=np.int32)] if F else []
     std = X.std(0)
     Xn = (X - X.mean(0)) / np.where(std > 1e-9, std, 1.0)
     corr = np.clip((Xn.T @ Xn) / max(X.shape[0], 1), -1.0, 1.0)
     dist = 1.0 - np.abs(corr)
     np.fill_diagonal(dist, 0.0)
+    # NaN/inf arise from empty or non-finite traces; treat as "uncorrelated"
+    dist = np.clip(np.nan_to_num(dist, nan=1.0, posinf=1.0, neginf=1.0),
+                   0.0, 1.0)
     # condensed form
     iu = np.triu_indices(F, 1)
     Z = linkage(dist[iu], method="average")

@@ -15,34 +15,36 @@ from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.core import init_state, process_serial, process_parallel
+from repro.core import compute_features, default_backend, init_state
 from repro.core.records import epoch_indices
 from repro.detection.kitnet import train_kitnet, score_kitnet
 from repro.traffic.generator import to_jnp
 
 
-def _features(trace, n_slots: int, mode: str, backend: str = "parallel",
+def _features(trace, n_slots: int, mode: str, backend: str = None,
               state=None):
     st = state if state is not None else init_state(n_slots)
     pk = to_jnp(trace)
-    if backend == "parallel" and mode == "exact":
-        st, feats = process_parallel(st, pk)
-    else:
-        st, feats = process_serial(st, pk, mode=mode)
+    if backend is None:
+        backend = default_backend(mode)
+    st, feats = compute_features(st, pk, backend=backend, mode=mode)
     return st, np.asarray(feats)
 
 
 def run_peregrine(data: Dict, sampling: int, n_slots: int = 8192,
                   mode: str = "switch", train_epoch: int = 1,
-                  seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (scores, labels) per sampled feature record of the eval set."""
-    st, f_train = _features(data["train"], n_slots, mode,
-                            backend="serial" if mode == "switch" else "parallel")
+                  seed: int = 0, backend: str = None,
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (scores, labels) per sampled feature record of the eval set.
+
+    ``backend`` selects the FC implementation by name (serial/scan/pallas);
+    the default follows the arithmetic mode.
+    """
+    st, f_train = _features(data["train"], n_slots, mode, backend=backend)
     # train on (possibly all) benign records
     tr_idx = epoch_indices(len(f_train), train_epoch)
     net = train_kitnet(f_train[tr_idx], seed=seed)
-    st, f_eval = _features(data["eval"], n_slots, mode,
-                           backend="serial" if mode == "switch" else "parallel",
+    st, f_eval = _features(data["eval"], n_slots, mode, backend=backend,
                            state=st)
     idx = epoch_indices(len(f_eval), sampling)
     records = f_eval[idx]

@@ -13,32 +13,36 @@ from typing import Dict, Iterable, Tuple
 
 import numpy as np
 
-from repro.core import init_state, process_parallel, process_serial
+from repro.core import compute_features, default_backend, init_state
 from repro.core.records import epoch_indices
 from repro.detection.kitnet import score_kitnet, train_kitnet
 from repro.detection.metrics import auc, f1_at_fpr
 from repro.traffic.generator import to_jnp
 
 
-def _fc(trace, n_slots, mode, state=None):
+def _fc(trace, n_slots, mode, state=None, backend=None):
     st = state if state is not None else init_state(n_slots)
     pk = to_jnp(trace)
-    if mode == "exact":
-        st, f = process_parallel(st, pk)
-    else:
-        st, f = process_serial(st, pk, mode=mode)
+    if backend is None:
+        backend = default_backend(mode)
+    st, f = compute_features(st, pk, backend=backend, mode=mode)
     return st, np.asarray(f)
 
 
 def sweep_attack(data: Dict, rates: Iterable[int], n_slots: int = 8192,
                  mode: str = "switch", seed: int = 0,
-                 min_train_records: int = 16) -> Dict[str, Dict[int, Dict]]:
-    """Returns {system: {rate: {auc, f1_10, f1_01, n_records, n_attack}}}."""
+                 min_train_records: int = 16,
+                 backend: str = None) -> Dict[str, Dict[int, Dict]]:
+    """Returns {system: {rate: {auc, f1_10, f1_01, n_records, n_attack}}}.
+
+    ``backend`` names the Peregrine FC implementation (serial/scan/pallas);
+    the Kitsune baseline always computes exact software features.
+    """
     out = {"peregrine": {}, "kitsune": {}}
 
     # ---------------- Peregrine: FC over ALL packets, once ----------------
-    st, f_train = _fc(data["train"], n_slots, mode)
-    _, f_eval = _fc(data["eval"], n_slots, mode, state=st)
+    st, f_train = _fc(data["train"], n_slots, mode, backend=backend)
+    _, f_eval = _fc(data["eval"], n_slots, mode, state=st, backend=backend)
     ev_labels = data["eval"]["label"]
     for rate in rates:
         tr_idx = epoch_indices(len(f_train), rate)

@@ -58,9 +58,10 @@ def make_seq_parallel_decode(mesh: Mesh, seq_axes, kv_spec: P, q_spec: P):
 
         def local(qb, kb, vb, cl):
             # index of this shard along the seq axes
+            # mesh axis sizes are static; jax.lax.axis_size is newer-jax only
             idx = 0
             for a in axis:
-                idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
             S_loc = kb.shape[1]
             start = idx * S_loc
             acc, m, l = _local_partial(qb[:, 0], kb, vb, start, cl, scale)

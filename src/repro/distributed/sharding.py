@@ -34,6 +34,38 @@ PRODUCTION_RULES: Dict[str, Axis] = {
 }
 
 
+def set_mesh(mesh):
+    """``jax.set_mesh`` across jax versions.
+
+    Newer jax exposes ``jax.set_mesh`` as the context manager binding the
+    ambient mesh; on older releases (<= 0.4.x) ``jax.sharding.Mesh`` itself
+    is the context manager providing the resource environment that lets
+    ``jax.jit`` resolve bare PartitionSpecs.  Call sites use this shim so
+    the tier-1 suite runs on both.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def named_shardings(mesh, tree):
+    """PartitionSpec/None leaves -> ``NamedSharding`` on ``mesh``.
+
+    Older jax's ``jax.jit`` rejects bare PartitionSpecs in
+    ``in_shardings``/``out_shardings``; newer jax resolves them against the
+    ambient mesh.  Converting explicitly works on both.  ``None`` leaves
+    (and ``None`` tree prefixes) keep their "unspecified — let the compiler
+    propagate" meaning and pass through untouched.
+    """
+    from jax.sharding import NamedSharding
+
+    def conv(x):
+        return NamedSharding(mesh, x) if isinstance(x, P) else x
+
+    return jax.tree_util.tree_map(
+        conv, tree, is_leaf=lambda x: x is None or isinstance(x, P))
+
+
 class AxisRules:
     def __init__(self, rules: Dict[str, Axis]):
         self.rules = dict(rules)

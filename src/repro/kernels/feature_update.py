@@ -18,6 +18,17 @@ Table layout: packed (n_slots, 12) f32 = [last_t*4 | w*4 | ls*4 | ss*4] is
 NOT used; we keep four (n_slots, 4) refs — measured better in interpret-mode
 sweeps and simpler aliasing.  Validated against the serial oracle
 (core/pipeline.py, exact mode, single key type).
+
+Two kernels live here:
+
+  * ``feature_update``       — the original single-key-type streaming update
+    (kept as the minimal reference kernel and for the kernel unit tests);
+  * ``feature_update_full``  — the complete Peregrine FC pipeline: all four
+    key types, direction-paired bidirectional tables, and the
+    SR/magnitude/radius/cov/PCC cross-direction statistics, emitting the
+    same (n, N_FEATURES) layout as the serial oracle.  This is the
+    ``backend="pallas"`` implementation behind
+    ``repro.core.backends.compute_features``.
 """
 from __future__ import annotations
 
@@ -28,9 +39,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.state import LAMBDAS, N_DECAY
+from repro.core.state import (
+    BI_STATS, LAMBDAS, N_BI, N_DECAY, N_FEATURES, N_UNI, UNI_STATS,
+    packet_slots,
+)
 
 _LAM = tuple(LAMBDAS)
+_N_US, _N_BS = len(UNI_STATS), len(BI_STATS)
 
 
 def _fc_kernel(lam_ref, slots_ref, ts_ref, len_ref,
@@ -132,3 +147,280 @@ def feature_update(table, slots, ts, lens, *, chunk: int = 256,
     lt, w, ls, ss, stats = out
     new_table = {"last_t": lt, "w": w, "ls": ls, "ss": ss}
     return new_table, stats[:n]
+
+
+# ===========================================================================
+# Full-feature kernel: all four key types + bidirectional statistics
+# ===========================================================================
+#
+# Layout decision (recorded here in lieu of DESIGN.md):
+#
+#   * Every flow table is packed into a 2-D (rows, N_DECAY) f32 ref so each
+#     packet touches whole (1, N_DECAY) rows — the lane dimension holds the
+#     four decay instances, exactly like the single-key kernel above.
+#   * The two *unidirectional* key types stack row-wise:
+#         row = key_idx * n_slots + slot                     (2·n_slots rows)
+#   * The two *bidirectional* key types additionally interleave direction:
+#         row = (key_idx * n_slots + slot) * 2 + dir         (4·n_slots rows)
+#     which is exactly ``state["bi"][f].reshape(-1, N_DECAY)`` — no data
+#     movement, just a view.  SR state (sr, sr_last_t) has no direction axis:
+#         row = key_idx * n_slots + slot                     (2·n_slots rows)
+#   * Row indices (own-direction, opposite-direction, SR) are precomputed on
+#     the host side per packet, so the in-kernel loop does no slot
+#     arithmetic — it only dynamic-slices rows, as the switch's register
+#     arrays do.
+#   * The kernel emits stats in a *blocked* layout (contiguous (1, N_DECAY)
+#     vectors per statistic: [w|mu|sig] per uni key, [w|mu|sig|mag|rad|cov|
+#     pcc] per bi key) because contiguous row stores are what the VPU wants;
+#     a fixed permutation (``_BLOCKED_TO_ORACLE``) reorders columns to the
+#     serial oracle's (key, decay, stat) feature order outside the kernel.
+#   * VMEM budget at 8192 slots/key: 4 uni refs x 256 KiB + 5 bi refs x
+#     512 KiB + 2 SR refs x 256 KiB ~= 4 MiB — comfortably resident; the
+#     sequential grid + input_output_aliases keep it there across chunks.
+#
+# Semantics are ``process_serial(..., mode="exact")``: per-packet decay +
+# atom update, stale opposite-direction statistics, decayed sum of residual
+# products (SR) for covariance/PCC.  The round-robin "switch" mode is
+# inherently scalar-serial and stays on the oracle path.
+
+
+def _blocked_to_oracle_perm():
+    """Column permutation: kernel blocked layout -> oracle feature order."""
+    perm = []
+    for k in range(N_UNI):
+        for d in range(N_DECAY):
+            for s in range(_N_US):
+                perm.append(k * N_DECAY * _N_US + s * N_DECAY + d)
+    off = N_UNI * N_DECAY * _N_US
+    for k in range(N_BI):
+        for d in range(N_DECAY):
+            for s in range(_N_BS):
+                perm.append(off + k * N_DECAY * _N_BS + s * N_DECAY + d)
+    return tuple(perm)
+
+
+_BLOCKED_TO_ORACLE = _blocked_to_oracle_perm()
+
+
+def _safe_div(a, b):
+    """Exact-mode division (0 where the divisor is <= 0), delegated to the
+    oracle's arithmetic so the two paths can never drift apart."""
+    from repro.core import arith
+    return arith.div(a, b, "exact")
+
+
+def _fc_full_kernel(lam_ref, urow_ref, brow_o_ref, brow_p_ref, brow_s_ref,
+                    ts_ref, len_ref,
+                    ult_i, uw_i, uls_i, uss_i,
+                    blt_i, bw_i, bls_i, bss_i, brl_i, bsr_i, bslt_i,
+                    ult, uw, uls, uss,
+                    blt, bw, bls, bss, brl, bsr, bslt,
+                    stats_ref, *, chunk: int, n_pkts: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _copy_in():
+        for src, dst in ((ult_i, ult), (uw_i, uw), (uls_i, uls), (uss_i, uss),
+                         (blt_i, blt), (bw_i, bw), (bls_i, bls), (bss_i, bss),
+                         (brl_i, brl), (bsr_i, bsr), (bslt_i, bslt)):
+            dst[...] = src[...]
+
+    lam = lam_ref[...]                                  # (1, N_DECAY)
+
+    def _update(lt, w, ls, ss, t, x):
+        """One stream's decay + atom update (exact mode)."""
+        fresh = lt < 0.0
+        dt = jnp.maximum(t - lt, 0.0)
+        delta = jnp.where(fresh, 0.0, jnp.exp2(-lam * dt))
+        return w * delta + 1.0, ls * delta + x, ss * delta + x * x
+
+    def _stats(w, ls, ss):
+        mu = _safe_div(ls, w)
+        var = jnp.abs(_safe_div(ss, w) - mu * mu)
+        return mu, var, jnp.sqrt(var)
+
+    def body(i, _):
+        g = step * chunk + i
+        valid = g < n_pkts
+        t = ts_ref[i]
+        x = len_ref[i]
+        pieces = []
+
+        # ---- unidirectional key types ----
+        for ki in range(N_UNI):
+            row = urow_ref[i, ki]
+            lt = ult[pl.ds(row, 1), :]
+            w2, ls2, ss2 = _update(lt, uw[pl.ds(row, 1), :],
+                                   uls[pl.ds(row, 1), :],
+                                   uss[pl.ds(row, 1), :], t, x)
+            mu, var, sig = _stats(w2, ls2, ss2)
+            pieces += [w2, mu, sig]
+
+            @pl.when(valid)
+            def _store_uni():
+                ult[pl.ds(row, 1), :] = jnp.full_like(lt, t)
+                uw[pl.ds(row, 1), :] = w2
+                uls[pl.ds(row, 1), :] = ls2
+                uss[pl.ds(row, 1), :] = ss2
+
+        # ---- bidirectional key types ----
+        for ki in range(N_BI):
+            orow = brow_o_ref[i, ki]                    # own-direction row
+            prow = brow_p_ref[i, ki]                    # opposite-direction
+            srow = brow_s_ref[i, ki]                    # SR (channel) row
+
+            lt_o = blt[pl.ds(orow, 1), :]
+            w_o, ls_o, ss_o = _update(lt_o, bw[pl.ds(orow, 1), :],
+                                      bls[pl.ds(orow, 1), :],
+                                      bss[pl.ds(orow, 1), :], t, x)
+            mu_o, var_o, sig_o = _stats(w_o, ls_o, ss_o)
+
+            # stale opposite-direction stats (stored values, as on switch)
+            w_p = bw[pl.ds(prow, 1), :]
+            mu_p, var_p, sig_p = _stats(w_p, bls[pl.ds(prow, 1), :],
+                                        bss[pl.ds(prow, 1), :])
+
+            # SR: decayed sum of cross-direction residual products
+            sr = bsr[pl.ds(srow, 1), :]
+            sr_lt = bslt[pl.ds(srow, 1), :]
+            dsr = jnp.where(sr_lt < 0.0, 0.0,
+                            jnp.exp2(-lam * jnp.maximum(t - sr_lt, 0.0)))
+            r = x - mu_o
+            r_opp = brl[pl.ds(prow, 1), :]
+            sr2 = sr * dsr + r * r_opp
+
+            mag = jnp.sqrt(mu_o * mu_o + mu_p * mu_p)
+            rad = jnp.sqrt(var_o * var_o + var_p * var_p)
+            cov = _safe_div(sr2, w_o + w_p)
+            pcc = _safe_div(cov, sig_o * sig_p)
+            pieces += [w_o, mu_o, sig_o, mag, rad, cov, pcc]
+
+            @pl.when(valid)
+            def _store_bi():
+                blt[pl.ds(orow, 1), :] = jnp.full_like(lt_o, t)
+                bw[pl.ds(orow, 1), :] = w_o
+                bls[pl.ds(orow, 1), :] = ls_o
+                bss[pl.ds(orow, 1), :] = ss_o
+                brl[pl.ds(orow, 1), :] = r
+                bsr[pl.ds(srow, 1), :] = sr2
+                bslt[pl.ds(srow, 1), :] = jnp.full_like(sr_lt, t)
+
+        row_stats = jnp.concatenate(pieces, axis=-1)    # (1, N_FEATURES)
+
+        @pl.when(valid)
+        def _store_stats():
+            stats_ref[pl.ds(i, 1), :] = row_stats
+
+        return 0
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "n"))
+def _fc_full_call(tables, urow, brow_o, brow_p, brow_s, ts, lens, *,
+                  chunk: int, interpret: bool, n: int):
+    n_pad = urow.shape[0]
+    nc = n_pad // chunk
+    rows_u = tables["ult"].shape[0]
+    rows_b = tables["blt"].shape[0]
+    rows_s = tables["bsr"].shape[0]
+
+    kernel = functools.partial(_fc_full_kernel, chunk=chunk, n_pkts=n)
+    spec_u = pl.BlockSpec((rows_u, N_DECAY), lambda s: (0, 0))
+    spec_b = pl.BlockSpec((rows_b, N_DECAY), lambda s: (0, 0))
+    spec_s = pl.BlockSpec((rows_s, N_DECAY), lambda s: (0, 0))
+    spec_rows = pl.BlockSpec((chunk, 2), lambda s: (s, 0))
+    spec_pkt = pl.BlockSpec((chunk,), lambda s: (s,))
+    tab_specs = [spec_u] * 4 + [spec_b] * 5 + [spec_s] * 2
+    tab_shapes = ([jax.ShapeDtypeStruct((rows_u, N_DECAY), jnp.float32)] * 4 +
+                  [jax.ShapeDtypeStruct((rows_b, N_DECAY), jnp.float32)] * 5 +
+                  [jax.ShapeDtypeStruct((rows_s, N_DECAY), jnp.float32)] * 2)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=[pl.BlockSpec((1, N_DECAY), lambda s: (0, 0)),
+                  spec_rows, spec_rows, spec_rows, spec_rows,
+                  spec_pkt, spec_pkt] + tab_specs,
+        out_specs=tab_specs + [
+            pl.BlockSpec((chunk, N_FEATURES), lambda s: (s, 0))],
+        out_shape=tab_shapes + [
+            jax.ShapeDtypeStruct((n_pad, N_FEATURES), jnp.float32)],
+        input_output_aliases={7 + k: k for k in range(11)},
+        interpret=interpret,
+    )(jnp.asarray(_LAM, jnp.float32)[None, :], urow, brow_o, brow_p, brow_s,
+      ts, lens,
+      tables["ult"], tables["uw"], tables["uls"], tables["uss"],
+      tables["blt"], tables["bw"], tables["bls"], tables["bss"],
+      tables["brl"], tables["bsr"], tables["bslt"])
+    stats = out[-1][:n]
+    names = ("ult", "uw", "uls", "uss", "blt", "bw", "bls", "bss",
+             "brl", "bsr", "bslt")
+    return dict(zip(names, out[:-1])), stats
+
+
+def feature_update_full(state, pkts, *, chunk: int = 256,
+                        interpret: bool = True):
+    """Full Peregrine FC (all 80 features) as one Pallas pipeline.
+
+    state: the ``init_state`` dict (rr counters pass through untouched —
+    round-robin decay belongs to switch mode, which stays on the serial
+    oracle).  pkts: raw packet arrays ``{ts, src, dst, sport, dport, proto,
+    length}``.  Returns ``(new_state, feats (n, N_FEATURES))`` matching
+    ``process_serial(..., mode="exact")`` to float tolerance.
+    """
+    n_slots = state["uni"]["w"].shape[1]
+    sl = packet_slots(pkts, n_slots)
+    ts = pkts["ts"].astype(jnp.float32)
+    lens = pkts["length"].astype(jnp.float32)
+    n = ts.shape[0]
+
+    # host-side row precomputation (see layout note above)
+    key_off = jnp.arange(N_UNI, dtype=jnp.int32) * n_slots
+    urow = jnp.stack([sl["src_mac_ip"], sl["src_ip"]], -1) + key_off[None]
+    bbase = jnp.stack([sl["channel"], sl["socket"]], -1) + key_off[None]
+    d = sl["dir"][:, None]
+    brow_o = bbase * 2 + d
+    brow_p = bbase * 2 + (1 - d)
+    brow_s = bbase
+
+    nc = -(-max(n, 1) // chunk)
+    n_pad = nc * chunk
+    pad2 = lambda a: jnp.pad(a, ((0, n_pad - n), (0, 0)))
+    pad1 = lambda a: jnp.pad(a, (0, n_pad - n))
+    tables = {
+        "ult": state["uni"]["last_t"].reshape(-1, N_DECAY),
+        "uw": state["uni"]["w"].reshape(-1, N_DECAY),
+        "uls": state["uni"]["ls"].reshape(-1, N_DECAY),
+        "uss": state["uni"]["ss"].reshape(-1, N_DECAY),
+        "blt": state["bi"]["last_t"].reshape(-1, N_DECAY),
+        "bw": state["bi"]["w"].reshape(-1, N_DECAY),
+        "bls": state["bi"]["ls"].reshape(-1, N_DECAY),
+        "bss": state["bi"]["ss"].reshape(-1, N_DECAY),
+        "brl": state["bi"]["res_last"].reshape(-1, N_DECAY),
+        "bsr": state["bi"]["sr"].reshape(-1, N_DECAY),
+        "bslt": state["bi"]["sr_last_t"].reshape(-1, N_DECAY),
+    }
+    new_tab, stats = _fc_full_call(
+        tables, pad2(urow), pad2(brow_o), pad2(brow_p), pad2(brow_s),
+        pad1(ts), pad1(lens), chunk=chunk, interpret=interpret, n=n)
+
+    feats = jnp.take(stats, jnp.asarray(_BLOCKED_TO_ORACLE), axis=1)
+    sh_u = (N_UNI, n_slots, N_DECAY)
+    sh_b = (N_BI, n_slots, 2, N_DECAY)
+    new_state = {
+        "uni": {"last_t": new_tab["ult"].reshape(sh_u),
+                "w": new_tab["uw"].reshape(sh_u),
+                "ls": new_tab["uls"].reshape(sh_u),
+                "ss": new_tab["uss"].reshape(sh_u),
+                "rr": state["uni"]["rr"]},
+        "bi": {"last_t": new_tab["blt"].reshape(sh_b),
+               "w": new_tab["bw"].reshape(sh_b),
+               "ls": new_tab["bls"].reshape(sh_b),
+               "ss": new_tab["bss"].reshape(sh_b),
+               "res_last": new_tab["brl"].reshape(sh_b),
+               "sr": new_tab["bsr"].reshape(N_BI, n_slots, N_DECAY),
+               "sr_last_t": new_tab["bslt"].reshape(N_BI, n_slots, N_DECAY),
+               "rr": state["bi"]["rr"]},
+    }
+    return new_state, feats

@@ -11,7 +11,10 @@ import os
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.feature_update import feature_update as _feat
+from repro.kernels.feature_update import (
+    feature_update as _feat,
+    feature_update_full as _feat_full,
+)
 from repro.kernels.kitnet_ae import kitnet_ensemble as _kitnet
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
@@ -26,6 +29,12 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 def feature_update(table, slots, ts, lens, *, chunk=256):
     return _feat(table, slots.astype(jnp.int32), ts.astype(jnp.float32),
                  lens.astype(jnp.float32), chunk=chunk, interpret=INTERPRET)
+
+
+def feature_update_full(state, pkts, *, chunk=256, interpret=None):
+    """Full 80-feature Peregrine FC (all key types + bi stats) in Pallas."""
+    itp = INTERPRET if interpret is None else interpret
+    return _feat_full(state, pkts, chunk=chunk, interpret=itp)
 
 
 def kitnet_ensemble(x_sub, w1, b1, w2, b2, mask, *, bb=128):

@@ -21,7 +21,8 @@ from repro.configs.base import ShapeConfig
 from repro.data import Prefetcher, lm_batches
 from repro.distributed.mesh_rules import make_rules
 from repro.distributed.params import batch_specs, opt_specs, param_specs
-from repro.distributed.sharding import AxisRules, use_rules
+from repro.distributed.sharding import (AxisRules, named_shardings, set_mesh,
+                                        use_rules)
 from repro.models import build_model
 from repro.training import CheckpointManager, init_train_state, make_train_step
 from repro.training.fault import StragglerMonitor, resilient_loop
@@ -72,8 +73,10 @@ def main():
             ss = {"params": ps, "opt": os_, "step": P()}
             bs = batch_specs(cfg, ShapeConfig("cli", args.seq, args.batch,
                                               "train"), rules)
-            step_fn = jax.jit(step_fn, in_shardings=(ss, bs),
-                              out_shardings=(ss, None))
+            step_fn = jax.jit(
+                step_fn,
+                in_shardings=named_shardings(mesh, (ss, bs)),
+                out_shardings=named_shardings(mesh, (ss, None)))
         else:
             step_fn = jax.jit(step_fn)
 
@@ -94,7 +97,7 @@ def main():
               f"tokens/s={toks / dt:.0f}")
 
     if mesh is not None:
-        with use_rules(rules_d), jax.set_mesh(mesh):
+        with use_rules(rules_d), set_mesh(mesh):
             run()
     else:
         run()

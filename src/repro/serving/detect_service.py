@@ -12,7 +12,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core import init_state, process_parallel, process_serial
+from repro.core import (compute_features, default_backend, init_state,
+                        resolve_backend)
 from repro.core.records import epoch_indices
 from repro.detection.kitnet import KitNet, score_kitnet, train_kitnet
 from repro.traffic.generator import to_jnp
@@ -20,9 +21,12 @@ from repro.traffic.generator import to_jnp
 
 class DetectionService:
     def __init__(self, epoch: int = 1024, n_slots: int = 8192,
-                 mode: str = "exact", threshold: Optional[float] = None):
+                 mode: str = "exact", threshold: Optional[float] = None,
+                 backend: Optional[str] = None):
         self.epoch = epoch
         self.mode = mode
+        self.backend = resolve_backend(backend if backend is not None
+                                       else default_backend(mode))
         self.state = init_state(n_slots)
         self.net: Optional[KitNet] = None
         self.threshold = threshold
@@ -32,10 +36,9 @@ class DetectionService:
     # ---- data-plane step (would run on the switch) ----
     def _fc(self, pkts: Dict[str, np.ndarray]) -> np.ndarray:
         pk = to_jnp(pkts)
-        if self.mode == "exact":
-            self.state, feats = process_parallel(self.state, pk)
-        else:
-            self.state, feats = process_serial(self.state, pk, mode=self.mode)
+        self.state, feats = compute_features(self.state, pk,
+                                             backend=self.backend,
+                                             mode=self.mode)
         return np.asarray(feats)
 
     # ---- training phase ----
@@ -47,6 +50,12 @@ class DetectionService:
             self._train_feats.append(feats[idx])
 
     def fit(self, seed: int = 0, fpr: float = 0.01) -> None:
+        if not self._train_feats:
+            raise RuntimeError(
+                "no training records collected: observe_benign() never "
+                f"crossed an epoch boundary (epoch={self.epoch}, "
+                f"{self.pkt_count} packets seen) — feed more benign traffic "
+                "or lower `epoch`")
         train = np.concatenate(self._train_feats)
         self.net = train_kitnet(train, seed=seed)
         scores = score_kitnet(self.net, train)

@@ -17,6 +17,38 @@ def test_feature_map_cluster_sizes():
     assert sorted(np.concatenate(clusters).tolist()) == list(range(40))
 
 
+def test_feature_map_degenerate_inputs():
+    """Regression: <2 features and NaN correlation distances must not crash
+    scipy's linkage (empty condensed matrix / NaN propagation)."""
+    rng = np.random.default_rng(0)
+    # single feature: one cluster, no condensed distance to build
+    one = feature_map(rng.normal(size=(50, 1)))
+    assert [c.tolist() for c in one] == [[0]]
+    # zero features: no clusters
+    assert feature_map(np.zeros((10, 0))) == []
+    # constant-feature trace: zero std columns, distances stay finite
+    clusters = feature_map(np.ones((40, 6), np.float32), max_size=4)
+    assert sorted(np.concatenate(clusters).tolist()) == list(range(6))
+    assert all(len(c) <= 4 for c in clusters)
+    # non-finite column (flood-style feature overflow) -> NaN distances
+    X = rng.normal(size=(30, 4))
+    X[:, 1] = np.inf
+    clusters = feature_map(X)
+    assert sorted(np.concatenate(clusters).tolist()) == list(range(4))
+    # zero-record trace
+    clusters = feature_map(np.zeros((0, 5)))
+    assert sorted(np.concatenate(clusters).tolist()) == list(range(5))
+
+
+def test_fit_without_records_raises():
+    """Regression: short trace + large epoch used to crash np.concatenate
+    with a bare ValueError; now a clear error explains the fix."""
+    svc = DetectionService(epoch=10_000, n_slots=256)
+    svc.observe_benign(benign_trace(500, 2.0, np.random.default_rng(0)))
+    with pytest.raises(RuntimeError, match="no training records"):
+        svc.fit()
+
+
 def test_kitnet_scores_anomalies_higher():
     rng = np.random.default_rng(1)
     train = rng.normal(size=(2000, 30)).astype(np.float32)

@@ -1,6 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional test dependency: when absent the whole module
+degrades to a skip instead of aborting collection of the tier-1 suite.
+"""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import arith
