@@ -39,9 +39,11 @@ def bench_detection_auc():
 def bench_throughput():
     """Fig 8."""
     from benchmarks.throughput import fc_rates, md_rate
-    fc = fc_rates(n_pkts=8000)
+    fc = fc_rates(n_pkts=8000,
+                  backends=("serial", "scan", "pallas", "sharded:4"))
     md = md_rate(n_train=2000, n_score=4096)
     return (f"fc_scan_pps={fc['scan_pps']:.0f};"
+            f"fc_sharded4_pps={fc['sharded4_pps']:.0f};"
             f"md_rps={md:.0f}")
 
 

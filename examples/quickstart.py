@@ -2,14 +2,16 @@
 
 Synthesises a Mirai-style trace, trains the detector on the benign prefix,
 then streams the attack window through the data-plane feature pipeline and
-scores per-epoch records — §3.2's workflow end to end.
+scores per-epoch records — §3.2's workflow end to end.  The service's
+``observe_stream``/``process_stream`` chunk the trace with bounded memory
+and carry flow-table state plus the global packet count across chunks.
 
   PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
 
+Swap the FC data plane by name, e.g. the hash-partitioned flow tables:
+``DetectionService(..., backend="sharded", shards=16)``.
+"""
 from repro.detection.metrics import auc
-from repro.data import phv_batches
 from repro.serving import DetectionService
 from repro.traffic import synth_trace
 
@@ -22,21 +24,17 @@ data = synth_trace("mirai", n_train=12000, n_benign_eval=6000,
 svc = DetectionService(epoch=256, n_slots=8192, mode="exact")
 
 # 3. training phase: benign traffic only (first 1M packets in the paper)
-for chunk in phv_batches(data["train"], 4096):
-    svc.observe_benign(chunk)
+svc.observe_stream(data["train"], chunk=4096)
 svc.fit(fpr=0.01)
 print(f"trained; alarm threshold RMSE={svc.threshold:.4f}")
 
-# 4. detection phase: stream the eval window
-scores, labels, alarms = [], [], 0
-for chunk in phv_batches(data["eval"], 4096):
-    idx, s, al = svc.process(chunk)
-    scores.append(s)
-    labels.append(chunk["label"][idx])
-    alarms += int(al.sum())
+# 4. detection phase: stream the eval window. Record indices are global
+#    stream positions, so subtract the eval window's start offset to look up
+#    labels — chunking does not change which packets close an epoch.
+eval_start = svc.pkt_count
+idx, scores, alarms = svc.process_stream(data["eval"], chunk=4096)
+labels = data["eval"]["label"][idx - eval_start]
 
-scores = np.concatenate(scores)
-labels = np.concatenate(labels)
-print(f"{len(scores)} records scored, {alarms} alarms")
+print(f"{len(scores)} records scored, {int(alarms.sum())} alarms")
 print(f"attack-record AUC = {auc(scores, labels):.3f}  "
       f"(paper: >0.8 for 13/15 attacks)")

@@ -18,9 +18,13 @@ Backends (all emit the identical (n, N_FEATURES) layout):
     (kernels/feature_update.feature_update_full): the switch pipeline on a
     TPU core, flow tables resident in VMEM.  Exact mode only; runs in
     interpret mode on CPU and compiles on real TPU.
+  * ``sharded`` — hash-partitioned flow tables (core/sharded.py): S shards
+    executed in parallel (vmap / mesh placement via the ``flow_shards``
+    logical axis), bit-identical to ``serial`` in both modes.  Select the
+    partition count with ``shards=S``.
 
-``register_backend`` is the extension point for future sharded/multi-device
-flow-table backends.
+``register_backend`` remains the extension point for further flow-table
+backends (e.g. multi-host partitions).
 """
 from __future__ import annotations
 
@@ -76,6 +80,12 @@ def _pallas(state, pkts, mode: str = "exact", chunk: int = 256,
                                    interpret=interpret)
 
 
+@register_backend("sharded", modes=("exact", "switch"))
+def _sharded(state, pkts, mode: str = "exact", shards: int = 4, **_kw):
+    from repro.core.sharded import process_sharded
+    return process_sharded(state, pkts, shards=shards, mode=mode)
+
+
 def compute_features(state: Dict, pkts: Dict[str, jax.Array],
                      backend: str = "scan", mode: str = "exact",
                      **kw) -> Tuple[Dict, jax.Array]:
@@ -90,7 +100,8 @@ def compute_features(state: Dict, pkts: Dict[str, jax.Array],
     if mode not in modes:
         raise ValueError(
             f"FC backend {name!r} does not support mode {mode!r} "
-            f"(supports {modes}); use backend='serial' for switch mode")
+            f"(supports {modes}); use backend='serial' or 'sharded' "
+            "for switch mode")
     return fn(state, pkts, mode=mode, **kw)
 
 

@@ -42,13 +42,14 @@ def packet_sample_indices(n_packets: int, rate: int, offset: int = 0) -> np.ndar
 def per_flow_epoch_indices(slots: np.ndarray, epoch: int) -> np.ndarray:
     """Beyond-paper: close an epoch every x packets *per flow slot* —
     denser coverage of low-rate flows at equal record budget."""
+    if not len(slots):
+        return np.zeros((0,), dtype=np.int64)
     order = np.argsort(slots, kind="stable")
     s = slots[order]
-    # rank within flow
+    # rank within flow: distance from the segment's first sorted position
     start = np.r_[True, s[1:] != s[:-1]]
     seg_id = np.cumsum(start) - 1
-    first_pos = np.zeros(seg_id.max() + 1, dtype=np.int64)
-    np.minimum.at(first_pos, seg_id, np.arange(len(s)))
+    first_pos = np.flatnonzero(start)
     rank = np.arange(len(s)) - first_pos[seg_id]
     pick = (rank + 1) % epoch == 0
     return np.sort(order[pick])

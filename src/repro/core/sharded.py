@@ -1,0 +1,149 @@
+"""Sharded flow-table FC backend — the switch's partitioned register array.
+
+Peregrine's data plane scales because flow state is a *partitioned* register
+array: each pipeline stage owns a disjoint slice of the slot space and
+packets are routed to the owning partition by their slot index.  This module
+reproduces that layout in JAX: the flow tables are hash-partitioned into S
+shards (shard = slot mod S, local row = slot div S), every shard runs the
+serial oracle's per-packet update on its own slice, and the shards execute
+in parallel — ``vmap`` over the shard axis on one device, and placed across
+a mesh via the ``flow_shards`` logical axis (distributed/sharding.py) when
+one is bound.
+
+Exactness: slots never interact, so any partition that preserves each slot's
+packet order is *bit-identical* to the serial oracle.  Each shard scans the
+full packet batch; packets whose slot (per key type) lives elsewhere are
+redirected to a scratch row that is dropped on un-sharding, and the (n, 80)
+feature matrix is assembled by selecting each key-type block from its owning
+shard.  Both ``exact`` and ``switch`` arithmetic modes are supported — the
+round-robin counters are per-slot state, so they shard like everything else.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.pipeline import _packet_step
+from repro.core.state import (
+    BI_KEYS, N_FEATURES, UNI_KEYS, packet_slots, state_slots,
+)
+from repro.distributed.sharding import current_rules
+
+# feature-column block owned by each key type (oracle layout: uni blocks of
+# N_DECAY*3, then bi blocks of N_DECAY*7)
+_BLOCKS = (("src_mac_ip", 0, 12), ("src_ip", 12, 24),
+           ("channel", 24, 52), ("socket", 52, 80))
+assert _BLOCKS[-1][2] == N_FEATURES
+
+# table leaves that mean "never seen" at -1 (scratch rows start fresh)
+_FRESH_AT_MINUS1 = ("last_t", "sr_last_t")
+
+
+def shard_tables(state: Dict, shards: int) -> Dict:
+    """Global tables -> per-shard slices + one scratch row per shard.
+
+    Leaf (K, n_slots, ...) -> (S, K, n_slots//S + 1, ...); global slot g
+    lives in shard ``g % S`` at local row ``g // S``; local row n_local is
+    the scratch row non-member packets are redirected to.
+    """
+    def leaf(x, fill):
+        k, ns = x.shape[0], x.shape[1]
+        nl = ns // shards
+        y = jnp.moveaxis(x.reshape(k, nl, shards, *x.shape[2:]), 2, 0)
+        pad = jnp.full((shards, k, 1) + x.shape[2:], fill, x.dtype)
+        return jnp.concatenate([y, pad], axis=2)
+
+    return {grp: {f: leaf(v, -1.0 if f in _FRESH_AT_MINUS1 else 0)
+                  for f, v in state[grp].items()}
+            for grp in ("uni", "bi")}
+
+
+def unshard_tables(sharded: Dict, shards: int) -> Dict:
+    """Inverse of ``shard_tables`` (scratch rows dropped)."""
+    def leaf(y):
+        y = y[:, :, :-1]
+        k, nl = y.shape[1], y.shape[2]
+        return jnp.moveaxis(y, 0, 2).reshape(k, nl * shards, *y.shape[3:])
+
+    return {grp: {f: leaf(v) for f, v in sharded[grp].items()}
+            for grp in ("uni", "bi")}
+
+
+def _constrain_shards(tree, binding):
+    """Place the leading shard axis on the mesh via the ``flow_shards``
+    logical-axis ``binding``.  No-op when unbound (single-device)."""
+    if binding is None:
+        return tree
+
+    def c(x):
+        return jax.lax.with_sharding_constraint(
+            x, P(binding, *([None] * (x.ndim - 1))))
+
+    return jax.tree_util.tree_map(c, tree)
+
+
+def process_sharded(state: Dict, pkts: Dict[str, jax.Array],
+                    shards: int = 4, mode: str = "exact"
+                    ) -> Tuple[Dict, jax.Array]:
+    """Hash-partitioned FC: same I/O as ``process_serial``, bit-identical
+    features/state, shards executed in parallel over a vmapped shard axis.
+
+    The ambient ``flow_shards`` rule binding is resolved *here*, outside
+    jit, and passed down as a static argument — it participates in the jit
+    cache key, so toggling ``use_rules`` retraces instead of silently
+    reusing an executable compiled under a different placement.
+    """
+    rules = current_rules()
+    binding = rules.rules.get("flow_shards") if rules is not None else None
+    if isinstance(binding, list):
+        binding = tuple(binding)
+    return _process_sharded(state, pkts, shards=shards, mode=mode,
+                            flow_binding=binding)
+
+
+@partial(jax.jit, static_argnames=("shards", "mode", "flow_binding"))
+def _process_sharded(state: Dict, pkts: Dict[str, jax.Array],
+                     shards: int, mode: str, flow_binding
+                     ) -> Tuple[Dict, jax.Array]:
+    n_slots = state_slots(state)
+    if n_slots % shards:
+        raise ValueError(
+            f"n_slots={n_slots} not divisible by shards={shards}; "
+            "flow tables partition the slot space evenly")
+    n_local = n_slots // shards
+    sl = packet_slots(pkts, n_slots)
+    ts = pkts["ts"].astype(jnp.float32)
+    lens = pkts["length"].astype(jnp.float32)
+    n = ts.shape[0]
+
+    # route each packet (per key type) to its shard's local row; non-member
+    # packets go to the scratch row n_local
+    sid = jnp.arange(shards, dtype=jnp.int32)[:, None]          # (S, 1)
+    routed = {k: jnp.where(sl[k][None] % shards == sid,
+                           sl[k][None] // shards, n_local).astype(jnp.int32)
+              for k in UNI_KEYS + BI_KEYS}                      # each (S, n)
+
+    tables = _constrain_shards(shard_tables(state, shards), flow_binding)
+    routed = _constrain_shards(routed, flow_binding)
+
+    def run_shard(tab, routes):
+        xs = {"ts": ts, "length": lens, "dir": sl["dir"], **routes}
+
+        def step(tb, x):
+            st, f = _packet_step(tb, x, mode)
+            return {g: st[g] for g in ("uni", "bi")}, f
+
+        return jax.lax.scan(step, tab, xs)
+
+    tables, feats_all = jax.vmap(run_shard)(tables, routed)     # (S, n, 80)
+
+    # assemble features: each key-type block comes from its owning shard
+    rows = jnp.arange(n)
+    feats = jnp.concatenate(
+        [feats_all[sl[key] % shards, rows, a:b] for key, a, b in _BLOCKS],
+        axis=-1)
+    return unshard_tables(tables, shards), feats

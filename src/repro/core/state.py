@@ -89,11 +89,13 @@ def packet_slots(pkts: Dict[str, jax.Array], n_slots: int) -> Dict[str, jax.Arra
     pkts: {ts, src, dst, sport, dport, proto, length} arrays of shape (n,).
     Channel/socket keys are canonicalised (min/max endpoint) so both
     directions land in the same slot; ``dir`` = 0 if src is the canonical
-    low endpoint else 1.
+    low endpoint else 1.  Equal IPs (same-host/loopback socket pairs) break
+    the tie on ports, so the two directions of a swapped-port socket still
+    share a slot with opposite ``dir`` bits instead of merging.
     """
     src, dst = pkts["src"], pkts["dst"]
     sport, dport = pkts["sport"], pkts["dport"]
-    lo_is_src = src <= dst
+    lo_is_src = (src < dst) | ((src == dst) & (sport <= dport))
     ip_lo = jnp.where(lo_is_src, src, dst)
     ip_hi = jnp.where(lo_is_src, dst, src)
     p_lo = jnp.where(lo_is_src, sport, dport)

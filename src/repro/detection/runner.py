@@ -33,23 +33,29 @@ def _features(trace, n_slots: int, mode: str, backend: str = None,
 
 def run_peregrine(data: Dict, sampling: int, n_slots: int = 8192,
                   mode: str = "switch", train_epoch: int = 1,
-                  seed: int = 0, backend: str = None,
+                  seed: int = 0, backend: str = None, chunk: int = 8192,
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (scores, labels) per sampled feature record of the eval set.
 
-    ``backend`` selects the FC implementation by name (serial/scan/pallas);
-    the default follows the arithmetic mode.
+    ``backend`` selects the FC implementation by name
+    (serial/scan/pallas/sharded); the default follows the arithmetic mode.
+    The trace is streamed through ``DetectionService`` in ``chunk``-sized
+    batches — flow state and epoch accounting carry across chunks, so only
+    one chunk of features is resident at a time.
     """
-    st, f_train = _features(data["train"], n_slots, mode, backend=backend)
-    # train on (possibly all) benign records
-    tr_idx = epoch_indices(len(f_train), train_epoch)
-    net = train_kitnet(f_train[tr_idx], seed=seed)
-    st, f_eval = _features(data["eval"], n_slots, mode, backend=backend,
-                           state=st)
-    idx = epoch_indices(len(f_eval), sampling)
-    records = f_eval[idx]
+    # deferred: repro.serving imports this package for its service
+    from repro.serving.detect_service import DetectionService
+    svc = DetectionService(epoch=train_epoch, n_slots=n_slots, mode=mode,
+                           backend=backend)
+    svc.observe_stream(data["train"], chunk=chunk)
+    svc.fit(seed=seed)
+    # eval is a fresh capture: restart epoch accounting at the sampling rate
+    # (flow tables stay warm), so record indices are eval-local
+    svc.epoch = sampling
+    svc.reset_stream()
+    idx, scores, _ = svc.process_stream(data["eval"], chunk=chunk)
     labels = data["eval"]["label"][idx]
-    return score_kitnet(net, records), labels
+    return scores, labels
 
 
 def run_kitsune_baseline(data: Dict, sampling: int, n_slots: int = 8192,

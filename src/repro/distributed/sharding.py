@@ -31,6 +31,9 @@ PRODUCTION_RULES: Dict[str, Axis] = {
     "kv_seq": None,          # overridden to ("pod", "data") for long-context
     "ssm_inner": "model",
     "opt": ("pod", "data"),  # ZeRO-1 optimizer-state axis
+    # Peregrine flow-table partitions (core/sharded.py): the shard axis of
+    # the hash-partitioned flow state spreads over the DP axes
+    "flow_shards": ("pod", "data"),
 }
 
 

@@ -2,7 +2,10 @@
 
 ``interpret`` defaults to True because this container is CPU-only: the
 kernels execute their bodies in Python-on-CPU for validation.  On a real TPU
-deployment set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False).
+deployment set ``REPRO_PALLAS_COMPILE=1`` (or pass ``interpret=False``).
+The environment variable is read at *call* time, so flipping it takes
+effect without re-importing this module; an explicit ``interpret=`` always
+wins over the environment.
 """
 from __future__ import annotations
 
@@ -17,25 +20,33 @@ from repro.kernels.feature_update import (
 )
 from repro.kernels.kitnet_ae import kitnet_ensemble as _kitnet
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+def interpret_default() -> bool:
+    """Current interpret/compile choice from ``REPRO_PALLAS_COMPILE``."""
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _resolve(interpret) -> bool:
+    return interpret_default() if interpret is None else interpret
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
-                    bq=128, bk=128):
+                    bq=128, bk=128, interpret=None):
     return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
-                  bq=bq, bk=bk, interpret=INTERPRET)
+                  bq=bq, bk=bk, interpret=_resolve(interpret))
 
 
-def feature_update(table, slots, ts, lens, *, chunk=256):
+def feature_update(table, slots, ts, lens, *, chunk=256, interpret=None):
     return _feat(table, slots.astype(jnp.int32), ts.astype(jnp.float32),
-                 lens.astype(jnp.float32), chunk=chunk, interpret=INTERPRET)
+                 lens.astype(jnp.float32), chunk=chunk,
+                 interpret=_resolve(interpret))
 
 
 def feature_update_full(state, pkts, *, chunk=256, interpret=None):
     """Full 80-feature Peregrine FC (all key types + bi stats) in Pallas."""
-    itp = INTERPRET if interpret is None else interpret
-    return _feat_full(state, pkts, chunk=chunk, interpret=itp)
+    return _feat_full(state, pkts, chunk=chunk, interpret=_resolve(interpret))
 
 
-def kitnet_ensemble(x_sub, w1, b1, w2, b2, mask, *, bb=128):
-    return _kitnet(x_sub, w1, b1, w2, b2, mask, bb=bb, interpret=INTERPRET)
+def kitnet_ensemble(x_sub, w1, b1, w2, b2, mask, *, bb=128, interpret=None):
+    return _kitnet(x_sub, w1, b1, w2, b2, mask, bb=bb,
+                   interpret=_resolve(interpret))

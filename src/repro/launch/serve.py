@@ -18,7 +18,6 @@ from repro.models import build_model
 
 
 def serve_detect(args):
-    from repro.data import phv_batches
     from repro.detection.metrics import auc
     from repro.serving import DetectionService
     from repro.traffic import synth_trace
@@ -28,25 +27,20 @@ def serve_detect(args):
                        n_attack=args.n_eval // 2, seed=0)
     svc = DetectionService(epoch=args.epoch, mode=args.fc_mode)
     t0 = time.time()
-    for chunk in phv_batches(data["train"], 8192):
-        svc.observe_benign(chunk)
+    svc.observe_stream(data["train"], chunk=8192)
     svc.fit(fpr=0.01)
     print(f"trained on {svc.pkt_count} pkts in {time.time() - t0:.1f}s; "
           f"threshold={svc.threshold:.4f}")
-    scores, labels = [], []
     t0 = time.time()
-    n_alarm = 0
-    for chunk in phv_batches(data["eval"], 8192):
-        idx, s, alarms = svc.process(chunk)
-        scores.append(s)
-        labels.append(chunk["label"][idx])
-        n_alarm += int(alarms.sum())
+    # record indices are global stream positions; the eval window starts at
+    # the current packet count
+    eval_start = svc.pkt_count
+    idx, scores, alarms = svc.process_stream(data["eval"], chunk=8192)
     dt = time.time() - t0
-    scores = np.concatenate(scores)
-    labels = np.concatenate(labels)
+    labels = data["eval"]["label"][idx - eval_start]
     n = len(data["eval"]["ts"])
     print(f"processed {n} pkts in {dt:.1f}s ({n / dt:.0f} pps on-CPU), "
-          f"{len(scores)} records, {n_alarm} alarms, "
+          f"{len(scores)} records, {int(alarms.sum())} alarms, "
           f"AUC={auc(scores, labels):.3f}")
 
 

@@ -5,6 +5,13 @@ feature pipeline, emits per-epoch feature records, and scores them with
 KitNET — the full §3.2 workflow as one object.  Tracks the running packet
 count so epochs are continuous across batches, and keeps flow-table state
 warm between calls (exactly the switch's persistent registers).
+
+Record indices are *global* stream positions (offset by the packet count at
+the start of each batch), so a record produced by a streamed run is
+attributable to the same packet as in a single-batch run.  The
+``observe_stream``/``process_stream`` entry points chunk an arbitrarily long
+trace through the service with bounded memory: per-chunk packet arrays plus
+the sampled records are all that is ever resident.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import numpy as np
 from repro.core import (compute_features, default_backend, init_state,
                         resolve_backend)
 from repro.core.records import epoch_indices
+from repro.data.pipeline import phv_batches
 from repro.detection.kitnet import KitNet, score_kitnet, train_kitnet
 from repro.traffic.generator import to_jnp
 
@@ -22,11 +30,12 @@ from repro.traffic.generator import to_jnp
 class DetectionService:
     def __init__(self, epoch: int = 1024, n_slots: int = 8192,
                  mode: str = "exact", threshold: Optional[float] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, **backend_kw):
         self.epoch = epoch
         self.mode = mode
         self.backend = resolve_backend(backend if backend is not None
                                        else default_backend(mode))
+        self.backend_kw = backend_kw            # e.g. shards= for "sharded"
         self.state = init_state(n_slots)
         self.net: Optional[KitNet] = None
         self.threshold = threshold
@@ -38,16 +47,33 @@ class DetectionService:
         pk = to_jnp(pkts)
         self.state, feats = compute_features(self.state, pk,
                                              backend=self.backend,
-                                             mode=self.mode)
+                                             mode=self.mode,
+                                             **self.backend_kw)
         return np.asarray(feats)
 
+    def reset_stream(self, pkt_count: int = 0) -> None:
+        """Restart epoch accounting (a new capture); flow tables persist."""
+        self.pkt_count = pkt_count
+
     # ---- training phase ----
-    def observe_benign(self, pkts: Dict[str, np.ndarray]) -> None:
+    def observe_benign(self, pkts: Dict[str, np.ndarray]) -> np.ndarray:
+        """Feed one benign batch; returns the *global* indices of the
+        feature records collected for training."""
         feats = self._fc(pkts)
-        idx = epoch_indices(len(feats), self.epoch, self.pkt_count)
+        base = self.pkt_count
+        idx = epoch_indices(len(feats), self.epoch, base)
         self.pkt_count += len(feats)
         if len(idx):
             self._train_feats.append(feats[idx])
+        return idx + base
+
+    def observe_stream(self, pkts: Dict[str, np.ndarray],
+                       chunk: int = 4096) -> np.ndarray:
+        """Stream a long benign trace through ``observe_benign`` in
+        fixed-size chunks.  Returns all global record indices."""
+        out = [self.observe_benign(c) for c in phv_batches(pkts, chunk)]
+        return (np.concatenate(out) if out
+                else np.zeros((0,), dtype=np.int64))
 
     def fit(self, seed: int = 0, fpr: float = 0.01) -> None:
         if not self._train_feats:
@@ -66,12 +92,32 @@ class DetectionService:
     # ---- inference phase ----
     def process(self, pkts: Dict[str, np.ndarray]
                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Returns (record_indices, rmse_scores, alarms)."""
+        """Returns (global_record_indices, rmse_scores, alarms)."""
         assert self.net is not None, "call fit() first"
         feats = self._fc(pkts)
-        idx = epoch_indices(len(feats), self.epoch, self.pkt_count)
+        base = self.pkt_count
+        idx = epoch_indices(len(feats), self.epoch, base)
         self.pkt_count += len(feats)
         if not len(idx):
-            return idx, np.zeros((0,)), np.zeros((0,), bool)
+            return idx + base, np.zeros((0,)), np.zeros((0,), bool)
         scores = score_kitnet(self.net, feats[idx])
-        return idx, scores, scores > self.threshold
+        return idx + base, scores, scores > self.threshold
+
+    def process_stream(self, pkts: Dict[str, np.ndarray], chunk: int = 4096
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stream a long trace through ``process`` in fixed-size chunks,
+        carrying flow-table state and the running packet count across chunk
+        boundaries.  Returns concatenated (global_record_indices, scores,
+        alarms) — identical to a single ``process`` call on the whole trace
+        for the serial-semantics backends (serial/sharded/pallas)."""
+        idxs, scores, alarms = [], [], []
+        for c in phv_batches(pkts, chunk):
+            i, s, a = self.process(c)
+            idxs.append(i)
+            scores.append(s)
+            alarms.append(a)
+        if not idxs:
+            return (np.zeros((0,), dtype=np.int64), np.zeros((0,)),
+                    np.zeros((0,), bool))
+        return (np.concatenate(idxs), np.concatenate(scores),
+                np.concatenate(alarms))

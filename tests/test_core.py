@@ -142,7 +142,52 @@ def test_epoch_sampling():
 def test_per_flow_and_reservoir_samplers():
     slots = np.array([0, 0, 1, 0, 1, 1, 2, 0])
     idx = per_flow_epoch_indices(slots, 2)
-    # 2nd packet of each flow: positions 1 (flow0 #2), 4 (flow1 #2), 7 (flow0 #4)
-    assert 1 in idx and 4 in idx
+    # every 2nd packet of each flow: positions 1 (flow0 #2), 4 (flow1 #2),
+    # 7 (flow0 #4) — and nothing else (flow2 has a single packet)
+    assert list(idx) == [1, 4, 7]
     r = reservoir_indices(100, 10, seed=1)
     assert len(r) == 10 and (np.diff(r) > 0).all()
+
+
+def test_per_flow_rank_is_per_flow_not_global():
+    """Regression: first_pos initialised to zeros made the per-flow rank
+    degenerate to the global packet index, so the sampler picked plain
+    epoch positions.  Interleaved flows expose the difference."""
+    slots = np.array([0, 1, 0, 1, 0, 1])
+    # flow0 at 0,2,4 and flow1 at 1,3,5 -> 2nd packet of each: 2 and 3.
+    # (The degenerate version returned the odd global positions [1, 3, 5].)
+    assert list(per_flow_epoch_indices(slots, 2)) == [2, 3]
+    # multi-flow trace: every flow contributes exactly floor(count/epoch)
+    rng = np.random.default_rng(0)
+    slots = rng.integers(0, 7, 200)
+    idx = per_flow_epoch_indices(slots, 3)
+    want = sum(np.sum(slots == s) // 3 for s in np.unique(slots))
+    assert len(idx) == want
+    # each flow's picked packets are its 3rd, 6th, ... occurrences
+    for s in np.unique(slots):
+        pos = np.flatnonzero(slots == s)
+        assert set(idx) & set(pos) == set(pos[2::3])
+    assert len(per_flow_epoch_indices(np.array([], dtype=int), 4)) == 0
+
+
+def test_same_ip_socket_directions_share_slot():
+    """Regression: ``src <= dst`` gave both directions of a same-IP socket
+    pair dir=0 and hashed them to different slots (ports not canonical)."""
+    from repro.core import packet_slots
+    pk = {
+        "src": jnp.asarray([7, 7], jnp.uint32),
+        "dst": jnp.asarray([7, 7], jnp.uint32),
+        "sport": jnp.asarray([1000, 2000], jnp.uint32),
+        "dport": jnp.asarray([2000, 1000], jnp.uint32),
+        "proto": jnp.asarray([6, 6], jnp.uint32),
+    }
+    sl = packet_slots(pk, 512)
+    assert int(sl["socket"][0]) == int(sl["socket"][1])
+    assert int(sl["channel"][0]) == int(sl["channel"][1])
+    assert int(sl["dir"][0]) == 0 and int(sl["dir"][1]) == 1
+    # distinct IPs keep the IP-ordered canonicalisation
+    pk2 = {**pk, "src": jnp.asarray([3, 9], jnp.uint32),
+           "dst": jnp.asarray([9, 3], jnp.uint32)}
+    sl2 = packet_slots(pk2, 512)
+    assert int(sl2["socket"][0]) == int(sl2["socket"][1])
+    assert int(sl2["dir"][0]) == 0 and int(sl2["dir"][1]) == 1

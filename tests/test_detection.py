@@ -94,16 +94,55 @@ def test_detection_service_end_to_end():
     data = synth_trace("syn_dos", n_train=4000, n_benign_eval=3000,
                        n_attack=3000, seed=2)
     svc = DetectionService(epoch=64, n_slots=4096, mode="exact")
-    svc.observe_benign(data["train"])
+    tr_idx = svc.observe_benign(data["train"])
+    # record indices are global stream positions
+    assert list(tr_idx[:2]) == [63, 127] and svc.pkt_count == 4000
     svc.fit(fpr=0.05)
+    eval_start = svc.pkt_count
     idx, scores, alarms = svc.process(data["eval"])
-    labels = data["eval"]["label"][idx]
+    assert (idx >= eval_start).all()
+    labels = data["eval"]["label"][idx - eval_start]
     a = auc(scores, labels)
     assert a > 0.85, a
     # alarms should be dominated by attack records at this threshold
     if alarms.sum() > 0:
         precision = labels[alarms].mean()
         assert precision > 0.7
+
+
+def test_streamed_chunks_match_single_batch():
+    """Continuity across chunk boundaries: one big batch and many small
+    chunks must produce identical global record indices, scores, and alarms
+    (serial-semantics backend -> features are bit-identical)."""
+    import jax
+
+    data = synth_trace("mirai", n_train=1024, n_benign_eval=512,
+                       n_attack=512, seed=4)
+    svc = DetectionService(epoch=64, n_slots=1024, mode="exact",
+                           backend="sharded", shards=4)
+    svc.observe_stream(data["train"], chunk=256)
+    svc.fit(fpr=0.05)
+    snap_state = jax.tree_util.tree_map(lambda x: x, svc.state)
+    snap_count = svc.pkt_count
+
+    idx1, s1, a1 = svc.process(data["eval"])
+    svc.state, svc.pkt_count = snap_state, snap_count
+    # uneven chunking so epoch boundaries straddle chunk boundaries
+    idx2, s2, a2 = svc.process_stream(data["eval"], chunk=200)
+
+    np.testing.assert_array_equal(idx1, idx2)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(a1, a2)
+    # training-side continuity: chunked observe == one-shot observe
+    svc_one = DetectionService(epoch=64, n_slots=1024, mode="exact",
+                               backend="sharded", shards=4)
+    tr_one = svc_one.observe_benign(data["train"])
+    svc_chunks = DetectionService(epoch=64, n_slots=1024, mode="exact",
+                                  backend="sharded", shards=4)
+    tr_str = svc_chunks.observe_stream(data["train"], chunk=200)
+    np.testing.assert_array_equal(tr_one, tr_str)
+    np.testing.assert_array_equal(np.concatenate(svc_one._train_feats),
+                                  np.concatenate(svc_chunks._train_feats))
 
 
 def test_peregrine_beats_kitsune_under_sampling():

@@ -114,3 +114,24 @@ def test_flash_matches_model_attention_path():
                                  causal=True, bq=32, bk=32).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(d), np.asarray(bw), atol=2e-5)
     np.testing.assert_allclose(np.asarray(d), np.asarray(pl_out), atol=2e-5)
+
+
+def test_interpret_env_read_at_call_time(monkeypatch):
+    """Regression: REPRO_PALLAS_COMPILE was read once at import time, so
+    flipping interpret/compile required a re-import.  Now the env var is
+    resolved per call, and an explicit ``interpret=`` always wins."""
+    monkeypatch.delenv("REPRO_PALLAS_COMPILE", raising=False)
+    assert ops.interpret_default() is True
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "1")
+    assert ops.interpret_default() is False
+    # explicit interpret=True overrides the compile request (CPU-safe)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16))
+    k = jax.random.normal(ks[1], (1, 2, 32, 16))
+    v = jax.random.normal(ks[2], (1, 2, 32, 16))
+    out = ops.flash_attention(q, k, v, causal=True, bq=16, bk=16,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-6)
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "0")
+    assert ops.interpret_default() is True
