@@ -23,6 +23,14 @@ selects the partition count):
   * sharded — hash-partitioned flow tables, S shards vmapped (or placed on
     a mesh); serial per-packet semantics inside each shard.
 
+``--stage full`` additionally measures the WHOLE pipeline — FC -> per-epoch
+record sampling -> per-chunk MD scoring — for every (fc_backend x
+md_backend) pair through ``DetectionService.process_stream``, emitting
+``pipeline_<fc>_x_<md>_pps`` rows into ``results/throughput.json`` next to
+the FC-only rows.  MD backends (``--md-backends einsum,pallas``) come from
+``repro.detection.md_backends`` — the batched einsum path or the fused
+Pallas ensemble kernel (DESIGN.md §3).
+
 The TPU projection for the scan pipeline is derived from its roofline bytes
 (see EXPERIMENTS.md §Perf — Peregrine pipeline).
 
@@ -52,6 +60,8 @@ from benchmarks.common import save, timeit
 from repro.core import (available_backends, compute_features, init_state,
                         resolve_backend)
 from repro.detection.kitnet import score_kitnet, train_kitnet
+from repro.detection.md_backends import (available_md_backends,
+                                         validate_md_options)
 from repro.serving import DetectionService
 from repro.traffic import synth_trace, to_jnp
 
@@ -134,12 +144,68 @@ def md_rate(n_train: int = 4000, n_score: int = 8192):
     return n_score / t
 
 
+def pipeline_rates(backends, md_backends=("einsum", "pallas"),
+                   n_pkts: int = 8000, epoch: int = 64, n_slots: int = 8192,
+                   chunk: int = 2048) -> Dict[str, float]:
+    """``--stage full``: steady-state pps of the WHOLE pipeline — FC ->
+    per-epoch record sampling -> per-chunk MD scoring — for every
+    (fc_backend x md_backend) pair, measured through
+    ``DetectionService.process_stream`` exactly as deployed (state + packet
+    count carried across chunks, scores emitted per chunk).  ``epoch=64``
+    keeps the MD stage on ~1/64 of the packets so its cost is visible in
+    the pair rates rather than rounding away."""
+    data = synth_trace("mirai", n_train=n_pkts, n_benign_eval=n_pkts // 2,
+                       n_attack=n_pkts // 2, seed=0)
+    out = {}
+    for spec in backends:
+        name, kw, label = parse_backend(spec.strip())
+        cap = _BACKEND_PKTS.get(name)
+        ntr = n_pkts if cap is None else min(cap, n_pkts)
+        nev = min(ntr, len(data["eval"]["ts"]))
+        tr = {k: v[:ntr] for k, v in data["train"].items()}
+        ev = {k: v[:nev] for k, v in data["eval"].items()}
+        c = min(chunk, ntr)
+        # the FC training pass is identical for every MD backend: observe
+        # once, snapshot, then fit + measure per MD backend from the
+        # snapshot (fit() consumes the collected records and sets the
+        # threshold, so both are restored per pair)
+        svc = DetectionService(epoch=epoch, n_slots=n_slots, mode="exact",
+                               backend=name, **kw)
+        svc.observe_stream(tr, chunk=c)
+        feats0 = list(svc._train_feats)
+        state0 = jax.tree_util.tree_map(lambda x: x, svc.state)
+        count0 = svc.pkt_count
+        for md in md_backends:
+            # re-validate against the service's md_kw on every switch, the
+            # same invariant the DetectionService constructor establishes
+            svc.md_backend = validate_md_options(md.strip(), svc.md_kw)
+            svc._train_feats = list(feats0)
+            svc.threshold = None
+            svc.fit()
+            svc.state = jax.tree_util.tree_map(lambda x: x, state0)
+            svc.pkt_count = count0
+            svc.process_stream(ev, chunk=c)     # warm-up/compile
+            reps = 3 if name in ("scan", "pallas") else 1
+            t = timeit(lambda: svc.process_stream(ev, chunk=c),
+                       reps=reps, warmup=0)
+            out[f"pipeline_{label}_x_{svc.md_backend}_pps"] = nev / t
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--backends", default=DEFAULT_BACKENDS,
                     help=f"comma list from {available_backends()}; "
                          "sharded takes a :S shard-count suffix")
+    ap.add_argument("--md-backends", default="einsum,pallas",
+                    help=f"comma list from {available_md_backends()} "
+                         "(used by --stage full)")
+    ap.add_argument("--stage", choices=("fc", "full"), default="fc",
+                    help="fc: per-backend FC component rates (default); "
+                         "full: additionally measure the whole "
+                         "FC -> record sampling -> MD pipeline per "
+                         "(fc_backend x md_backend) pair")
     ap.add_argument("--chunk", type=int, default=2048,
                     help="streaming chunk size (packets per batch)")
     ap.add_argument("--service", action=argparse.BooleanOptionalAction,
@@ -176,9 +242,14 @@ def main():
            "note": note}
     if svc is not None:
         out["service_stream_pps"] = svc
+    if args.stage == "full":
+        mds = tuple(m.strip() for m in args.md_backends.split(",")
+                    if m.strip())
+        out.update(pipeline_rates(backends, md_backends=mds,
+                                  n_pkts=min(n, 8000), chunk=args.chunk))
     for k, v in out.items():
         if isinstance(v, float):
-            print(f"{k:26s} {v:12.0f}")
+            print(f"{k:32s} {v:12.0f}")
     print("stable pps:", {r: int(v) for r, v in curve.items()})
     save("throughput", out)
 

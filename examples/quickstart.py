@@ -9,7 +9,11 @@ and carry flow-table state plus the global packet count across chunks.
   PYTHONPATH=src python examples/quickstart.py
 
 Swap the FC data plane by name, e.g. the hash-partitioned flow tables:
-``DetectionService(..., backend="sharded", shards=16)``.
+``DetectionService(..., backend="sharded", shards=16)`` — and the MD
+scoring stage the same way: ``DetectionService(..., md_backend="pallas")``
+runs KitNET's ensemble layer through the fused Pallas kernel, with each
+chunk's records scored as they arrive (per-chunk streaming scores are
+bit-identical to one-batch for the serial-semantics FC backends).
 """
 from repro.detection.metrics import auc
 from repro.serving import DetectionService

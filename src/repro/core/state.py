@@ -2,7 +2,7 @@
 
 Slots are direct-indexed by ``hash(flow_key) % n_slots`` with *no* collision
 resolution, exactly like the switch's stateful SRAM arrays (colliding flows
-merge — part of the fidelity model, noted in DESIGN.md).
+merge — part of the fidelity model, noted in DESIGN.md §1).
 
 Four decay instances per atom (lambda = 10, 1, 1/10, 1/60 — windows 100ms /
 1s / 10s / 60s) as in §4.

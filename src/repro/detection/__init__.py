@@ -1,3 +1,8 @@
 from repro.detection.kitnet import KitNet, train_kitnet, score_kitnet  # noqa: F401
+from repro.detection.md_backends import (  # noqa: F401
+    available_md_backends, default_md_backend, ensemble_rmse_records,
+    register_md_backend, resolve_md_backend, score_records,
+    validate_md_options,
+)
 from repro.detection.metrics import auc, f1_at_fpr  # noqa: F401
 from repro.detection.runner import run_peregrine, run_kitsune_baseline  # noqa: F401

@@ -10,14 +10,15 @@ Architecture (§3.4 of the Peregrine paper):
 
 Training is single-pass minibatched SGD in JAX (the original is per-record
 SGD; same objective, batched for TPU/vector efficiency — deviation recorded
-in DESIGN.md).  All ensemble AEs run as ONE padded batched einsum so the MD
-stage is a single fused computation (see kernels/kitnet_ae for the Pallas
-version).
+in DESIGN.md §3).  All ensemble AEs run as ONE padded batched einsum so the
+MD stage is a single fused computation; the fused Pallas version of the
+ensemble layer plugs in through ``detection.md_backends.score_records``
+(``backend="pallas"``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,7 +124,7 @@ def _normalize(x, lo, hi):
     # range are allowed out to 4x so flood-style feature explosions sit far
     # off the AEs' learned manifold (big reconstruction error) without
     # overflowing f32 on constant-in-training columns.  (Kitsune updates its
-    # running min/max online instead; deviation recorded in DESIGN.md.)
+    # running min/max online instead; deviation recorded in DESIGN.md §3.)
     return jnp.clip((x - lo) / jnp.maximum(hi - lo, 1e-9), 0.0, 4.0)
 
 
@@ -152,8 +153,17 @@ def output_rmse(params, r_norm) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 def train_kitnet(feats_train: np.ndarray, seed: int = 0, max_size: int = 10,
                  lr: float = 0.05, batch: int = 256, epochs: int = 4,
-                 ) -> KitNet:
-    """Fit FM + normalisation on the benign training records, then SGD."""
+                 md_backend: str = "einsum",
+                 md_kw: Optional[Dict] = None) -> KitNet:
+    """Fit FM + normalisation on the benign training records, then SGD.
+
+    ``md_backend`` selects the MD implementation for the training-set
+    ensemble-RMSE pass (which fixes the output AE's normalisation bounds
+    and training inputs) — einsum or the fused Pallas kernel — so the
+    fitted net is consistent with the backend used at scoring time;
+    ``md_kw`` carries its options (e.g. ``{"bb": 256}`` for pallas).
+    SGD itself stays on the einsum graph (it needs gradients).
+    """
     F = feats_train.shape[1]
     clusters = feature_map(feats_train, max_size)
     net = init_kitnet(jax.random.PRNGKey(seed), clusters, F)
@@ -191,7 +201,11 @@ def train_kitnet(feats_train: np.ndarray, seed: int = 0, max_size: int = 10,
     params = {**net.params, **ens_params}
 
     # ensemble RMSEs over training set -> output AE normalisation + training
-    r_train = ensemble_rmse(params, idx, mask, _normalize(X, lo, hi))
+    # (dispatched so pallas-scored deployments also train through the kernel)
+    from repro.detection.md_backends import ensemble_rmse_records
+    r_train = ensemble_rmse_records(params, idx, mask,
+                                    _normalize(X, lo, hi),
+                                    backend=md_backend, **(md_kw or {}))
     r_lo, r_hi = r_train.min(0), r_train.max(0)
     rn = _normalize(r_train, r_lo, r_hi)
     k = rn.shape[1]
@@ -227,7 +241,8 @@ def _score(params, idx, mask, lo, hi, r_lo, r_hi, X):
 
 
 def score_kitnet(net: KitNet, feats: np.ndarray) -> np.ndarray:
-    """Anomaly RMSE score per record."""
+    """Anomaly RMSE score per record (the einsum MD backend; use
+    ``detection.md_backends.score_records`` to select backends by name)."""
     X = jnp.asarray(feats, jnp.float32)
     return np.asarray(_score(net.params, net.idx, net.mask, net.norm_min,
                              net.norm_max, net.out_min, net.out_max, X))

@@ -34,19 +34,25 @@ def _features(trace, n_slots: int, mode: str, backend: str = None,
 def run_peregrine(data: Dict, sampling: int, n_slots: int = 8192,
                   mode: str = "switch", train_epoch: int = 1,
                   seed: int = 0, backend: str = None, chunk: int = 8192,
+                  md_backend: str = None, md_kw: Dict = None,
                   ) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (scores, labels) per sampled feature record of the eval set.
 
     ``backend`` selects the FC implementation by name
     (serial/scan/pallas/sharded); the default follows the arithmetic mode.
-    The trace is streamed through ``DetectionService`` in ``chunk``-sized
-    batches — flow state and epoch accounting carry across chunks, so only
-    one chunk of features is resident at a time.
+    ``md_backend`` selects the KitNET scoring implementation
+    (einsum/pallas, see ``detection.md_backends``; ``md_kw`` carries its
+    options, e.g. ``{"bb": 256}``).  The trace is streamed
+    through ``DetectionService`` in ``chunk``-sized batches — flow state
+    and epoch accounting carry across chunks and each chunk's records are
+    scored as they arrive, so only one chunk of features is resident at a
+    time.
     """
     # deferred: repro.serving imports this package for its service
     from repro.serving.detect_service import DetectionService
     svc = DetectionService(epoch=train_epoch, n_slots=n_slots, mode=mode,
-                           backend=backend)
+                           backend=backend, md_backend=md_backend,
+                           md_kw=md_kw)
     svc.observe_stream(data["train"], chunk=chunk)
     svc.fit(seed=seed)
     # eval is a fresh capture: restart epoch accounting at the sampling rate

@@ -14,8 +14,9 @@ from typing import Dict, Iterable, Tuple
 import numpy as np
 
 from repro.core import compute_features, default_backend, init_state
+from repro.detection.md_backends import default_md_backend, score_records
 from repro.core.records import epoch_indices
-from repro.detection.kitnet import score_kitnet, train_kitnet
+from repro.detection.kitnet import train_kitnet
 from repro.detection.metrics import auc, f1_at_fpr
 from repro.traffic.generator import to_jnp
 
@@ -31,13 +32,19 @@ def _fc(trace, n_slots, mode, state=None, backend=None):
 
 def sweep_attack(data: Dict, rates: Iterable[int], n_slots: int = 8192,
                  mode: str = "switch", seed: int = 0,
-                 min_train_records: int = 16,
-                 backend: str = None) -> Dict[str, Dict[int, Dict]]:
+                 min_train_records: int = 16, backend: str = None,
+                 md_backend: str = None,
+                 md_kw: Dict = None) -> Dict[str, Dict[int, Dict]]:
     """Returns {system: {rate: {auc, f1_10, f1_01, n_records, n_attack}}}.
 
     ``backend`` names the Peregrine FC implementation (serial/scan/pallas);
-    the Kitsune baseline always computes exact software features.
+    ``md_backend`` the KitNET scoring implementation (einsum/pallas, with
+    options in ``md_kw``), used for both systems.  The Kitsune baseline
+    always computes exact software features.
     """
+    if md_backend is None:
+        md_backend = default_md_backend()
+    md_kw = md_kw or {}
     out = {"peregrine": {}, "kitsune": {}}
 
     # ---------------- Peregrine: FC over ALL packets, once ----------------
@@ -49,9 +56,11 @@ def sweep_attack(data: Dict, rates: Iterable[int], n_slots: int = 8192,
         if len(tr_idx) < min_train_records:  # keep detector trainable
             tr_idx = epoch_indices(len(f_train), max(1, len(f_train) //
                                                      min_train_records))
-        net = train_kitnet(f_train[tr_idx], seed=seed)
+        net = train_kitnet(f_train[tr_idx], seed=seed,
+                           md_backend=md_backend, md_kw=md_kw)
         ev_idx = epoch_indices(len(f_eval), rate)
-        scores = score_kitnet(net, f_eval[ev_idx])
+        scores = score_records(net, f_eval[ev_idx], backend=md_backend,
+                               **md_kw)
         labels = ev_labels[ev_idx]
         out["peregrine"][rate] = _metrics(scores, labels)
 
@@ -68,9 +77,10 @@ def sweep_attack(data: Dict, rates: Iterable[int], n_slots: int = 8192,
                 np.zeros(max(len(ev_idx), 1)), ev_s["label"]
                 if len(ev_idx) else np.array([0, 1], np.uint8))
             continue
-        net = train_kitnet(f_tr, seed=seed)
+        net = train_kitnet(f_tr, seed=seed, md_backend=md_backend,
+                           md_kw=md_kw)
         _, f_ev = _fc(ev_s, n_slots, "exact", state=st)
-        scores = score_kitnet(net, f_ev)
+        scores = score_records(net, f_ev, backend=md_backend, **md_kw)
         out["kitsune"][rate] = _metrics(scores, ev_s["label"])
     return out
 

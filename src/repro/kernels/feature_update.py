@@ -153,35 +153,12 @@ def feature_update(table, slots, ts, lens, *, chunk: int = 256,
 # Full-feature kernel: all four key types + bidirectional statistics
 # ===========================================================================
 #
-# Layout decision (recorded here in lieu of DESIGN.md):
-#
-#   * Every flow table is packed into a 2-D (rows, N_DECAY) f32 ref so each
-#     packet touches whole (1, N_DECAY) rows — the lane dimension holds the
-#     four decay instances, exactly like the single-key kernel above.
-#   * The two *unidirectional* key types stack row-wise:
-#         row = key_idx * n_slots + slot                     (2·n_slots rows)
-#   * The two *bidirectional* key types additionally interleave direction:
-#         row = (key_idx * n_slots + slot) * 2 + dir         (4·n_slots rows)
-#     which is exactly ``state["bi"][f].reshape(-1, N_DECAY)`` — no data
-#     movement, just a view.  SR state (sr, sr_last_t) has no direction axis:
-#         row = key_idx * n_slots + slot                     (2·n_slots rows)
-#   * Row indices (own-direction, opposite-direction, SR) are precomputed on
-#     the host side per packet, so the in-kernel loop does no slot
-#     arithmetic — it only dynamic-slices rows, as the switch's register
-#     arrays do.
-#   * The kernel emits stats in a *blocked* layout (contiguous (1, N_DECAY)
-#     vectors per statistic: [w|mu|sig] per uni key, [w|mu|sig|mag|rad|cov|
-#     pcc] per bi key) because contiguous row stores are what the VPU wants;
-#     a fixed permutation (``_BLOCKED_TO_ORACLE``) reorders columns to the
-#     serial oracle's (key, decay, stat) feature order outside the kernel.
-#   * VMEM budget at 8192 slots/key: 4 uni refs x 256 KiB + 5 bi refs x
-#     512 KiB + 2 SR refs x 256 KiB ~= 4 MiB — comfortably resident; the
-#     sequential grid + input_output_aliases keep it there across chunks.
-#
-# Semantics are ``process_serial(..., mode="exact")``: per-packet decay +
-# atom update, stale opposite-direction statistics, decayed sum of residual
-# products (SR) for covariance/PCC.  The round-robin "switch" mode is
-# inherently scalar-serial and stays on the oracle path.
+# The table/row layout (uni keys stacked row-wise, bi keys interleaving
+# direction as a reshape view, host-precomputed row indices, blocked stat
+# emission + ``_BLOCKED_TO_ORACLE`` permutation, VMEM budget) is recorded in
+# DESIGN.md §2.  Semantics are ``process_serial(..., mode="exact")``; the
+# round-robin "switch" mode is inherently scalar-serial and stays on the
+# oracle path.
 
 
 def _blocked_to_oracle_perm():

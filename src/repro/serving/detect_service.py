@@ -11,7 +11,14 @@ the start of each batch), so a record produced by a streamed run is
 attributable to the same packet as in a single-batch run.  The
 ``observe_stream``/``process_stream`` entry points chunk an arbitrarily long
 trace through the service with bounded memory: per-chunk packet arrays plus
-the sampled records are all that is ever resident.
+the sampled records are all that is ever resident, and MD scoring happens
+*per chunk* (per-record scores don't depend on their batch, so chunked
+scores/alarms are bit-identical to a one-batch run).
+
+Both compute stages are selectable by name: ``backend=`` picks the FC
+implementation (``repro.core.backends``), ``md_backend=`` the scoring
+implementation (``repro.detection.md_backends`` — einsum or the fused
+Pallas ensemble kernel).
 """
 from __future__ import annotations
 
@@ -23,18 +30,27 @@ from repro.core import (compute_features, default_backend, init_state,
                         resolve_backend)
 from repro.core.records import epoch_indices
 from repro.data.pipeline import phv_batches
-from repro.detection.kitnet import KitNet, score_kitnet, train_kitnet
+from repro.detection.kitnet import KitNet, train_kitnet
+from repro.detection.md_backends import (default_md_backend, score_records,
+                                         validate_md_options)
 from repro.traffic.generator import to_jnp
 
 
 class DetectionService:
     def __init__(self, epoch: int = 1024, n_slots: int = 8192,
                  mode: str = "exact", threshold: Optional[float] = None,
-                 backend: Optional[str] = None, **backend_kw):
+                 backend: Optional[str] = None,
+                 md_backend: Optional[str] = None,
+                 md_kw: Optional[Dict] = None, **backend_kw):
         self.epoch = epoch
         self.mode = mode
         self.backend = resolve_backend(backend if backend is not None
                                        else default_backend(mode))
+        self.md_kw = dict(md_kw or {})          # e.g. bb=/interpret= for MD
+        # resolves the name AND rejects options the backend doesn't accept
+        self.md_backend = validate_md_options(
+            md_backend if md_backend is not None else default_md_backend(),
+            self.md_kw)
         self.backend_kw = backend_kw            # e.g. shards= for "sharded"
         self.state = init_state(n_slots)
         self.net: Optional[KitNet] = None
@@ -83,8 +99,11 @@ class DetectionService:
                 f"{self.pkt_count} packets seen) — feed more benign traffic "
                 "or lower `epoch`")
         train = np.concatenate(self._train_feats)
-        self.net = train_kitnet(train, seed=seed)
-        scores = score_kitnet(self.net, train)
+        self.net = train_kitnet(train, seed=seed,
+                                md_backend=self.md_backend,
+                                md_kw=self.md_kw)
+        scores = score_records(self.net, train, backend=self.md_backend,
+                               **self.md_kw)
         if self.threshold is None:
             self.threshold = float(np.quantile(scores, 1.0 - fpr))
         self._train_feats = []
@@ -100,7 +119,8 @@ class DetectionService:
         self.pkt_count += len(feats)
         if not len(idx):
             return idx + base, np.zeros((0,)), np.zeros((0,), bool)
-        scores = score_kitnet(self.net, feats[idx])
+        scores = score_records(self.net, feats[idx],
+                               backend=self.md_backend, **self.md_kw)
         return idx + base, scores, scores > self.threshold
 
     def process_stream(self, pkts: Dict[str, np.ndarray], chunk: int = 4096
