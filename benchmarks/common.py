@@ -7,6 +7,7 @@ import time
 from typing import Callable, Dict
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
@@ -26,6 +27,11 @@ def save(name: str, payload: Dict) -> str:
     os.makedirs(RESULTS, exist_ok=True)
     fn = os.path.join(RESULTS, f"{name}.json")
     with open(fn, "w") as f:
+        json.dump(payload, f, indent=1)
+    # repo-root snapshot (BENCH_<name>.json): committed alongside the code
+    # so the perf trajectory accumulates across PRs instead of living only
+    # in benchmarks/results/
+    with open(os.path.join(ROOT, f"BENCH_{name}.json"), "w") as f:
         json.dump(payload, f, indent=1)
     return fn
 

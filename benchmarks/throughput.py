@@ -25,11 +25,36 @@ selects the partition count):
 
 ``--stage full`` additionally measures the WHOLE pipeline — FC -> per-epoch
 record sampling -> per-chunk MD scoring — for every (fc_backend x
-md_backend) pair through ``DetectionService.process_stream``, emitting
-``pipeline_<fc>_x_<md>_pps`` rows into ``results/throughput.json`` next to
-the FC-only rows.  MD backends (``--md-backends einsum,pallas``) come from
+md_backend) pair through ``DetectionService.process_stream``, along BOTH
+deployment paths (DESIGN.md §6/§8):
+
+  * ``pipeline_<fc>_x_<md>_pps`` — the staged path: per-chunk host
+    round-trips between FC, numpy epoch sampling, and MD;
+  * ``pipeline_fused_<fc>_x_<md>_pps`` — the fused device-resident step
+    (``serving/fused.py``): one donated jit per chunk, on-device epoch
+    gather, chunk k+1 dispatched before chunk k's sampled scores drain;
+
+plus per-chunk latency percentiles (``*_latency`` → p50/p99 ms) for each.
+MD backends (``--md-backends einsum,pallas``) come from
 ``repro.detection.md_backends`` — the batched einsum path or the fused
-Pallas ensemble kernel (DESIGN.md §3).
+Pallas ensemble kernel (DESIGN.md §3).  ``--assert-fused-speedup R`` turns
+the run into a perf-smoke check: it fails unless every measured fused pair
+is at least R× its staged twin *in the same run* (a ratio, so slow CI
+hosts don't flake it).
+
+Reading the staged-vs-fused rows: on a single CPU device both paths share
+the same FC compute, which dominates a 2048-packet chunk, so the fused
+win here is the few ms/chunk of host round-trips plus the record-sampled
+feature emission — expect single-digit-to-tens of percent, converging to
+pps parity with FC-alone (``service_stream_pps`` ≈ ``scan_pps``).  The
+structural win is the dataflow: per-chunk host cost is O(records), not
+O(packets), and on an accelerator (where a host sync stalls the device
+and the feature matrix crosses PCIe) the staged path's per-chunk
+synchronisation is the multiplier the paper's offloading argument is
+about.  Beware contended hosts: staged rows degrade far more than fused
+ones under memory/CPU pressure (the staged path allocates the full
+(n, 80) matrix host-side every chunk), which can inflate the apparent
+ratio — compare rows from the same idle-host run only.
 
 The TPU projection for the scan pipeline is derived from its roofline bytes
 (see EXPERIMENTS.md §Perf — Peregrine pipeline).
@@ -52,13 +77,16 @@ hardware.
 from __future__ import annotations
 
 import argparse
+import time
 from typing import Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import save, timeit
 from repro.core import (available_backends, compute_features, init_state,
                         resolve_backend)
+from repro.data.pipeline import phv_batches
 from repro.detection.kitnet import score_kitnet, train_kitnet
 from repro.detection.md_backends import (available_md_backends,
                                          validate_md_options)
@@ -85,6 +113,26 @@ def parse_backend(spec: str) -> Tuple[str, Dict, str]:
     return resolve_backend(spec), {}, resolve_backend(spec)
 
 
+def _trunc_chunked(split: Dict, backend_name: str, n_pkts: int,
+                   chunk: int) -> Tuple[Dict, int, int]:
+    """Shared trace-truncation/chunking setup for every streaming
+    measurement: truncate to the backend's measurement cap, then floor to
+    whole chunks so the stream is equal-size chunks (single compilation,
+    steady state).  Returns (truncated split, n_packets, chunk_size)."""
+    cap = _BACKEND_PKTS.get(backend_name)
+    n = n_pkts if cap is None else min(cap, n_pkts)
+    n = min(n, len(split["ts"]))
+    c = min(chunk, n)
+    n = (n // c) * c
+    return {k: v[:n] for k, v in split.items()}, n, c
+
+
+def _snap(state):
+    """Donation-safe state snapshot: fused steps consume the handle they
+    are passed, so benchmark restore points must be real copies."""
+    return jax.tree_util.tree_map(jnp.copy, state)
+
+
 def fc_rates(n_pkts: int = 20000, n_slots: int = 8192,
              backends=tuple(DEFAULT_BACKENDS.split(",")),
              chunk: int = 2048) -> Dict[str, float]:
@@ -92,15 +140,12 @@ def fc_rates(n_pkts: int = 20000, n_slots: int = 8192,
     flow-table state carried across chunk boundaries."""
     data = synth_trace("mirai", n_train=n_pkts, n_benign_eval=1000,
                        n_attack=1000, seed=0)
-    pk = to_jnp(data["train"])
 
     out = {}
     for spec in backends:
         name, kw, label = parse_backend(spec.strip())
-        cap = _BACKEND_PKTS.get(name)
-        n = n_pkts if cap is None else min(cap, n_pkts)
-        c = min(chunk, n)
-        n = (n // c) * c                    # equal-size chunks: one compile
+        tr, n, c = _trunc_chunked(data["train"], name, n_pkts, chunk)
+        pk = to_jnp(tr)
         chunks = [{k: v[i:i + c] for k, v in pk.items()}
                   for i in range(0, n, c)]
 
@@ -144,27 +189,32 @@ def md_rate(n_train: int = 4000, n_score: int = 8192):
     return n_score / t
 
 
+def _latency_pcts(lats_s) -> Dict[str, float]:
+    a = np.asarray(lats_s) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99))}
+
+
 def pipeline_rates(backends, md_backends=("einsum", "pallas"),
                    n_pkts: int = 8000, epoch: int = 64, n_slots: int = 8192,
-                   chunk: int = 2048) -> Dict[str, float]:
+                   chunk: int = 2048) -> Dict[str, object]:
     """``--stage full``: steady-state pps of the WHOLE pipeline — FC ->
     per-epoch record sampling -> per-chunk MD scoring — for every
     (fc_backend x md_backend) pair, measured through
     ``DetectionService.process_stream`` exactly as deployed (state + packet
-    count carried across chunks, scores emitted per chunk).  ``epoch=64``
-    keeps the MD stage on ~1/64 of the packets so its cost is visible in
-    the pair rates rather than rounding away."""
+    count carried across chunks, scores emitted per chunk), along both the
+    staged (``fused=False``) and the fused device-resident
+    (``fused=True``, ``serving/fused.py``) paths, plus per-chunk latency
+    percentiles for each.  ``epoch=64`` keeps the MD stage on ~1/64 of the
+    packets so its cost is visible in the pair rates rather than rounding
+    away."""
     data = synth_trace("mirai", n_train=n_pkts, n_benign_eval=n_pkts // 2,
                        n_attack=n_pkts // 2, seed=0)
     out = {}
     for spec in backends:
         name, kw, label = parse_backend(spec.strip())
-        cap = _BACKEND_PKTS.get(name)
-        ntr = n_pkts if cap is None else min(cap, n_pkts)
-        nev = min(ntr, len(data["eval"]["ts"]))
-        tr = {k: v[:ntr] for k, v in data["train"].items()}
-        ev = {k: v[:nev] for k, v in data["eval"].items()}
-        c = min(chunk, ntr)
+        tr, ntr, c = _trunc_chunked(data["train"], name, n_pkts, chunk)
+        ev, nev, c_ev = _trunc_chunked(data["eval"], name, ntr, c)
         # the FC training pass is identical for every MD backend: observe
         # once, snapshot, then fit + measure per MD backend from the
         # snapshot (fit() consumes the collected records and sets the
@@ -173,8 +223,13 @@ def pipeline_rates(backends, md_backends=("einsum", "pallas"),
                                backend=name, **kw)
         svc.observe_stream(tr, chunk=c)
         feats0 = list(svc._train_feats)
-        state0 = jax.tree_util.tree_map(lambda x: x, svc.state)
+        state0 = _snap(svc.state)
         count0 = svc.pkt_count
+
+        def reset():
+            svc.state = _snap(state0)
+            svc.pkt_count = count0
+
         for md in md_backends:
             # re-validate against the service's md_kw on every switch, the
             # same invariant the DetectionService constructor establishes
@@ -182,13 +237,27 @@ def pipeline_rates(backends, md_backends=("einsum", "pallas"),
             svc._train_feats = list(feats0)
             svc.threshold = None
             svc.fit()
-            svc.state = jax.tree_util.tree_map(lambda x: x, state0)
-            svc.pkt_count = count0
-            svc.process_stream(ev, chunk=c)     # warm-up/compile
             reps = 3 if name in ("scan", "pallas") else 1
-            t = timeit(lambda: svc.process_stream(ev, chunk=c),
-                       reps=reps, warmup=0)
-            out[f"pipeline_{label}_x_{svc.md_backend}_pps"] = nev / t
+            for fused in (False, True):
+                tag = (f"pipeline{'_fused' if fused else ''}"
+                       f"_{label}_x_{svc.md_backend}")
+                reset()
+                svc.process_stream(ev, chunk=c_ev, fused=fused)  # warm-up
+                reset()
+                t = timeit(
+                    lambda: svc.process_stream(ev, chunk=c_ev, fused=fused),
+                    reps=reps, warmup=0)
+                out[f"{tag}_pps"] = nev / t
+                # per-chunk latency: drain each chunk before the next is
+                # dispatched (the sync cost the pipelined stream hides)
+                reset()
+                lats = []
+                for _ in range(reps):
+                    for ch in phv_batches(ev, c_ev):
+                        t0 = time.perf_counter()
+                        svc.process(ch, fused=fused)
+                        lats.append(time.perf_counter() - t0)
+                out[f"{tag}_latency"] = _latency_pcts(lats)
     return out
 
 
@@ -212,6 +281,11 @@ def main():
                     default=None,
                     help="also measure end-to-end DetectionService pps "
                          "(default: only with the full backend list)")
+    ap.add_argument("--assert-fused-speedup", type=float, default=None,
+                    metavar="RATIO",
+                    help="perf-smoke mode (needs --stage full): exit "
+                         "nonzero unless every measured fused pipeline is "
+                         "at least RATIO x its staged twin in this run")
     args = ap.parse_args()
     n = 8000 if args.quick else 40000
     backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
@@ -249,9 +323,31 @@ def main():
                                   n_pkts=min(n, 8000), chunk=args.chunk))
     for k, v in out.items():
         if isinstance(v, float):
-            print(f"{k:32s} {v:12.0f}")
+            print(f"{k:40s} {v:12.0f}")
+        elif isinstance(v, dict) and k.endswith("_latency"):
+            print(f"{k:40s} p50 {v['p50_ms']:8.2f} ms   "
+                  f"p99 {v['p99_ms']:8.2f} ms")
     print("stable pps:", {r: int(v) for r, v in curve.items()})
     save("throughput", out)
+    if args.assert_fused_speedup is not None:
+        ratio = args.assert_fused_speedup
+        bad = []
+        pairs = 0
+        for k, v in out.items():
+            if k.startswith("pipeline_fused_") and k.endswith("_pps"):
+                staged = out.get(k.replace("pipeline_fused_", "pipeline_"))
+                if staged is None:
+                    continue
+                pairs += 1
+                if v < ratio * staged:
+                    bad.append(f"{k}={v:.0f} < {ratio}x staged {staged:.0f}")
+        if not pairs:
+            raise SystemExit("--assert-fused-speedup needs --stage full "
+                             "(no fused pipeline rows were measured)")
+        if bad:
+            raise SystemExit("fused pipeline slower than staged: "
+                             + "; ".join(bad))
+        print(f"fused >= {ratio}x staged on all {pairs} measured pairs")
 
 
 if __name__ == "__main__":

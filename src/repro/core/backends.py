@@ -35,6 +35,11 @@ import jax
 # name -> (fn(state, pkts, mode, **kw) -> (state, feats), supported modes)
 _REGISTRY: Dict[str, Tuple[Callable, Tuple[str, ...]]] = {}
 
+# name -> fn(state, pkts, sample_idx, **kw) -> (state, feats[sample_idx]):
+# backends that can emit ONLY the sampled feature rows (state update still
+# covers every packet) — the fused serving step's fast path
+_SAMPLED: Dict[str, Callable] = {}
+
 # legacy / convenience spellings
 _ALIASES = {"parallel": "scan", "oracle": "serial", "kernel": "pallas"}
 
@@ -94,6 +99,12 @@ def compute_features(state: Dict, pkts: Dict[str, jax.Array],
     state: ``init_state`` dict; pkts: raw packet arrays.  Returns
     ``(new_state, feats (n, N_FEATURES))``.  Extra kwargs go to the backend
     (e.g. ``chunk=``/``interpret=`` for pallas).
+
+    Donation contract: callers that wrap this in a donated jit (the fused
+    serving step does, with ``state`` donated) must treat the passed-in
+    state handle as consumed — continue from ``new_state`` only, and
+    snapshot with ``tree_map(jnp.copy, state)`` beforehand if a restore
+    point is needed (DESIGN.md §8).
     """
     name = resolve_backend(backend)
     fn, modes = _REGISTRY[name]
@@ -103,6 +114,42 @@ def compute_features(state: Dict, pkts: Dict[str, jax.Array],
             f"(supports {modes}); use backend='serial' or 'sharded' "
             "for switch mode")
     return fn(state, pkts, mode=mode, **kw)
+
+
+def register_sampled_backend(name: str, fn: Callable) -> None:
+    """Register a record-sampled FC path for an existing backend:
+    ``fn(state, pkts, sample_idx, **kw) -> (state, feats (m, F))``."""
+    _SAMPLED[resolve_backend(name)] = fn
+
+
+def _scan_sampled(state, pkts, sample_idx, **_kw):
+    from repro.core.parallel import process_parallel_sampled
+    return process_parallel_sampled(state, pkts, sample_idx)
+
+
+register_sampled_backend("scan", _scan_sampled)
+
+
+def compute_features_sampled(state: Dict, pkts: Dict[str, jax.Array],
+                             sample_idx: jax.Array, backend: str = "scan",
+                             mode: str = "exact", **kw
+                             ) -> Tuple[Dict, jax.Array]:
+    """One batch through the FC backend, emitting ONLY the sampled rows.
+
+    Returns ``(new_state, feats (m, N_FEATURES))`` with ``new_state``
+    identical to :func:`compute_features` and ``feats`` row-for-row equal
+    to ``compute_features(...)[1][sample_idx]``.  Backends with a native
+    record-sampled path (``scan``) skip materialising the unsampled rows;
+    everything else computes the full matrix and gathers.  Traceable — the
+    fused serving step (serving/fused.py) inlines it into one jit.
+    """
+    name = resolve_backend(backend)
+    fn = _SAMPLED.get(name)
+    if fn is not None and mode == "exact":
+        return fn(state, pkts, sample_idx, **kw)
+    new_state, feats = compute_features(state, pkts, backend=name,
+                                        mode=mode, **kw)
+    return new_state, feats[sample_idx]
 
 
 def default_backend(mode: str = "exact") -> str:

@@ -16,6 +16,18 @@ Semantics are bit-for-bit the serial oracle's ``exact`` mode (tested to
 float tolerance); the round-robin ``switch`` mode is inherently per-packet
 serial and stays on the oracle path.
 
+A batch pays ONE stable argsort per key type (vmapped over the stacked
+tables: one sort primitive for the two uni keys, one for the two bi keys).
+Everything else is derived: the bidirectional (slot, dir, time) stream
+order comes from the (slot, time) channel sort via segmented cumsum ranks
+(``_dir_interleave_perm``), and the ``res_last`` store-back reuses that
+same permutation instead of re-sorting by the composite key —
+``tests/test_fused.py`` pins the sort count at ≤ 4.
+
+``process_parallel_sampled`` is the record-sampled variant for the fused
+serving step (DESIGN.md §8): flow-state updates cover every packet, but
+feature statistics are only materialised at the sampled rows.
+
 Requires ``pkts["ts"]`` sorted ascending (streams are time-ordered).
 """
 from __future__ import annotations
@@ -75,7 +87,10 @@ def seg_last_scan(seg_start, valid, value):
         fl, vl, xl = l
         fr, vr, xr = r
         found = jnp.where(fr, vr, vl | vr)
-        val = jnp.where(fr, jnp.where(vr, xr, xr * 0), jnp.where(vr, xr, xl))
+        # a fresh segment with no valid element must contribute an explicit
+        # zero: ``xr * 0`` would propagate NaN/inf from invalid rows
+        val = jnp.where(fr, jnp.where(vr, xr, jnp.zeros_like(xr)),
+                        jnp.where(vr, xr, xl))
         return (fl | fr, found, val)
 
     _, found, val = jax.lax.associative_scan(combine, (f, v, value), axis=0)
@@ -91,18 +106,51 @@ def _segments(sorted_ids):
     return start, end
 
 
+def _dir_interleave_perm(start, end, d):
+    """Derive the (slot, dir, time) permutation from the (slot, time) sort.
+
+    Given segment markers of the channel-sorted order and the per-element
+    direction bits ``d``, returns ``gather`` such that ``X[gather]`` is the
+    stable sort by the composite key ``slot*2 + dir`` — computed with
+    segmented cumsum ranks in O(n), so the batch pays ONE argsort per key
+    type instead of re-sorting for the directional view.
+    """
+    n = d.shape[0]
+    ar = jnp.arange(n)
+    seg_first = jax.lax.cummax(jnp.where(start, ar, -1))
+    seg_last = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(end, ar, n))))
+    d0 = (d == 0).astype(ar.dtype)
+    pref0 = jnp.cumsum(d0)                  # inclusive dir-0 count
+    excl0 = pref0 - d0
+    base0 = excl0[seg_first]
+    n0_seg = pref0[seg_last] - base0        # dir-0 population of the segment
+    rank0 = excl0 - base0
+    d1 = 1 - d0
+    excl1 = jnp.cumsum(d1) - d1
+    rank1 = excl1 - excl1[seg_first]
+    pos = seg_first + jnp.where(d == 0, rank0, n0_seg + rank1)
+    return jnp.zeros_like(pos).at[pos].set(ar)
+
+
 # ---------------------------------------------------------------------------
 # one directional stream table pass
 # ---------------------------------------------------------------------------
-def stream_pass(tab, stream_ids, ts, lens, n_streams):
+def stream_pass(tab, stream_ids, ts, lens, n_streams, order=None,
+                sample=None):
     """Vectorised decayed-atom update for one table of streams.
 
     tab: {"last_t","w","ls","ss"} each (n_streams, N_DECAY).
     stream_ids/ts/lens: (n,). Returns (per-packet atoms dict in ORIGINAL
-    order, updated table).
+    order, updated table).  ``order`` is the stable sort by stream id; pass
+    it when already available (derived or shared) to avoid a re-sort.
+    ``sample`` restricts the returned atoms to those original-order rows
+    (the table update always covers every packet) — the fused serving step
+    only ever reads the sampled records, so the full-width gather back to
+    packet order is skipped.
     """
     n = stream_ids.shape[0]
-    order = jnp.argsort(stream_ids, stable=True)
+    if order is None:
+        order = jnp.argsort(stream_ids, stable=True)
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(n))
     sid = stream_ids[order]
     t = ts[order]
@@ -143,7 +191,8 @@ def stream_pass(tab, stream_ids, ts, lens, n_streams):
         "ls": tab["ls"].at[sid_end].set(ls, mode="drop"),
         "ss": tab["ss"].at[sid_end].set(ss, mode="drop"),
     }
-    atoms = {"w": w[inv], "ls": ls[inv], "ss": ss[inv]}
+    rows = inv if sample is None else inv[sample]
+    atoms = {"w": w[rows], "ls": ls[rows], "ss": ss[rows]}
     return atoms, new_tab
 
 
@@ -157,42 +206,50 @@ def _stats(w, ls, ss):
 # ---------------------------------------------------------------------------
 # channel pass: stale opposite stats + SR recurrence
 # ---------------------------------------------------------------------------
-def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots):
+def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
+                 order=None, dir_gather=None, sample=None):
     """Cross-direction state for ONE bi key type.
 
     bi_k: the per-key-type slices of the bi table (each (n_slots, ...)).
     own_atoms: per-packet post-update atoms of the packet's own direction
     (original order, (n, N_DECAY) each).
-    Returns (features pieces, updated bi_k).
+    Returns (features pieces, updated bi_k).  ``order`` (stable sort by
+    slot) and ``dir_gather`` (channel order -> (slot, dir, time) order,
+    see ``_dir_interleave_perm``) are derived when not supplied.
+
+    ``sample`` restricts the *emitted feature rows* to those
+    original-order positions: the segmented scans and table store-backs
+    always cover every packet (they carry the flow state), but the derived
+    statistics (opposite-side stats, mag/radius/cov/pcc) and the feature
+    stack are only materialised at the sampled rows — identical values to
+    slicing the full output, row for row, since the per-row math is
+    unchanged.
     """
     n = slots.shape[0]
-    order = jnp.argsort(slots, stable=True)
+    if order is None:
+        order = jnp.argsort(slots, stable=True)
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(n))
     sid = slots[order]
     d = dirs[order]
     t = ts[order]
     start, end = _segments(sid)
+    if dir_gather is None:
+        dir_gather = _dir_interleave_perm(start, end, d)
 
     own_w = own_atoms["w"][order]
     own_ls = own_atoms["ls"][order]
     own_ss = own_atoms["ss"][order]
 
-    # --- stale opposite-direction atoms: latest same-channel opposite pkt ---
-    def latest_dir(X, tab_val):
-        valid = d == X
-        stacked = jnp.stack([own_w, own_ls, own_ss], axis=-1)  # (n,ND,3)
-        found, val = seg_last_scan(start, valid, stacked)
-        fallback = tab_val[sid]                                # (n,ND,3)
-        return jnp.where(found, val, fallback)
-
+    # --- stale opposite-direction atoms: latest same-channel opposite pkt
+    # (the scans run over every packet; the table fallback is applied at
+    # emission time so it is only gathered for emitted rows) ---
+    stacked = jnp.stack([own_w, own_ls, own_ss], axis=-1)      # (n,ND,3)
+    found0, val0 = seg_last_scan(start, d == 0, stacked)
+    found1, val1 = seg_last_scan(start, d == 1, stacked)
     tabv = jnp.stack([bi_k["w"], bi_k["ls"], bi_k["ss"]], axis=-1)  # (ns,2,ND,3)
-    v0 = latest_dir(0, tabv[:, 0])
-    v1 = latest_dir(1, tabv[:, 1])
-    opp = jnp.where((d == 0)[:, None, None], v1, v0)          # (n,ND,3)
-    opp_w, opp_ls, opp_ss = opp[..., 0], opp[..., 1], opp[..., 2]
 
-    # --- residuals ---
-    mu_own, var_own, sig_own = _stats(own_w, own_ls, own_ss)
+    # --- residuals (full width: the SR recurrence consumes every row) ---
+    mu_own, _, _ = _stats(own_w, own_ls, own_ss)
     lens_s = lens[order]
     r = lens_s[:, None] - mu_own                              # (n, ND)
 
@@ -218,18 +275,27 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots):
     x_sr = jnp.where(start[:, None], x_sr + dsr * bi_k["sr"][sid], x_sr)
     sr = seg_linear_scan(start, dsr, x_sr)
 
-    # --- bidirectional stats ---
-    mu_opp, var_opp, sig_opp = _stats(opp_w, opp_ls, opp_ss)
-    mag = jnp.sqrt(mu_own ** 2 + mu_opp ** 2)
-    rad = jnp.sqrt(var_own ** 2 + var_opp ** 2)
-    wsum = own_w + opp_w
-    cov = jnp.where(wsum > 0, sr / jnp.maximum(wsum, 1e-12), 0.0)
-    sden = sig_own * sig_opp
-    pcc = jnp.where(sden > 0, cov / jnp.maximum(sden, 1e-12), 0.0)
+    # --- bidirectional stats, emitted at the requested rows only ---
+    def emit(rows):
+        sel = (lambda a: a) if rows is None else (lambda a: a[rows])
+        dr = sel(d)
+        ow, ols, oss = sel(own_w), sel(own_ls), sel(own_ss)
+        v0 = jnp.where(sel(found0), sel(val0), tabv[:, 0][sel(sid)])
+        v1 = jnp.where(sel(found1), sel(val1), tabv[:, 1][sel(sid)])
+        opp = jnp.where((dr == 0)[:, None, None], v1, v0)     # (m,ND,3)
+        opp_w, opp_ls, opp_ss = opp[..., 0], opp[..., 1], opp[..., 2]
+        mu_o, var_o, sig_o = _stats(ow, ols, oss)
+        mu_p, var_p, sig_p = _stats(opp_w, opp_ls, opp_ss)
+        mag = jnp.sqrt(mu_o ** 2 + mu_p ** 2)
+        rad = jnp.sqrt(var_o ** 2 + var_p ** 2)
+        wsum = ow + opp_w
+        cov = jnp.where(wsum > 0, sel(sr) / jnp.maximum(wsum, 1e-12), 0.0)
+        sden = sig_o * sig_p
+        pcc = jnp.where(sden > 0, cov / jnp.maximum(sden, 1e-12), 0.0)
+        return jnp.stack([ow, mu_o, sig_o, mag, rad, cov, pcc],
+                         axis=-1)                             # (m, ND, 7)
 
-    feats = jnp.stack([own_w, mu_own, sig_own, mag, rad, cov, pcc],
-                      axis=-1)                                 # (n, ND, 7)
-    feats = feats[inv]
+    feats = emit(None)[inv] if sample is None else emit(inv[sample])
 
     # --- store-back (segment ends; res_last per direction: last of each) ---
     sid_end = jnp.where(end, sid, n_slots)
@@ -239,71 +305,106 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots):
         jnp.broadcast_to(t[:, None], sr.shape), mode="drop")
     # last residual of each (channel, direction): last occurrence of the
     # composite key sid*2+d (unique per (segment, dir) since segments are
-    # channel-contiguous) — resort by that key, take segment ends.
-    key2 = sid * 2 + d
-    o2 = jnp.argsort(key2, stable=True)
-    k2s = key2[o2]
+    # channel-contiguous) — the derived directional permutation IS the
+    # stable sort by that key, so take its segment ends (no re-sort).
+    k2s = (sid * 2 + d)[dir_gather]
     _, end2 = _segments(k2s)
     sid2_end = jnp.where(end2, k2s // 2, n_slots)
     d2 = k2s % 2
     new_bi["res_last"] = new_bi["res_last"].at[sid2_end, d2].set(
-        r[o2], mode="drop")
+        r[dir_gather], mode="drop")
     return feats, new_bi
 
 
-@jax.jit
-def process_parallel(state: Dict, pkts: Dict[str, jax.Array]
-                     ) -> Tuple[Dict, jax.Array]:
-    """Exact-mode Peregrine FC via segmented scans. Same I/O as
-    ``process_serial(..., mode="exact")``."""
+def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None):
+    """Full bidirectional update for ONE bi key type with ONE argsort.
+
+    tabs: the per-key slices of ``state["bi"]`` (last_t/w/ls/ss
+    (n_slots, 2, ND); sr/sr_last_t (n_slots, ND); res_last (n_slots, 2, ND)).
+    The channel sort (slot, time) is computed once; the directional stream
+    order (slot, dir, time) the atom update needs is derived from it with
+    segmented cumsum ranks, and the ``res_last`` store-back reuses the same
+    derived permutation.  Returns (bi features (n|m, ND, 7), updated tabs);
+    ``sample`` restricts the emitted feature rows (state is always full).
+    """
+    order = jnp.argsort(slots, stable=True)
+    sid = slots[order]
+    d_s = dirs[order]
+    start, end = _segments(sid)
+    dir_gather = _dir_interleave_perm(start, end, d_s)
+    order_dir = order[dir_gather]
+
+    # directional streams: stream id = slot*2 + dir; table layout
+    # (n_slots, 2, ND) reshapes to that row id — a view, no data movement
+    tab = {f: tabs[f].reshape(2 * n_slots, N_DECAY)
+           for f in ("last_t", "w", "ls", "ss")}
+    atoms, new_tab = stream_pass(tab, slots * 2 + dirs, ts, lens,
+                                 2 * n_slots, order=order_dir)
+    # stale-opposite fallback must be the PRE-batch table values
+    bi_k_pre = {f: tabs[f] for f in
+                ("sr", "sr_last_t", "res_last", "w", "ls", "ss")}
+    fts, upd = channel_pass(bi_k_pre, slots, dirs, ts, lens, atoms, n_slots,
+                            order=order, dir_gather=dir_gather,
+                            sample=sample)
+    new_tabs = {f: new_tab[f].reshape(n_slots, 2, N_DECAY)
+                for f in ("last_t", "w", "ls", "ss")}
+    new_tabs.update({f: upd[f] for f in ("sr", "sr_last_t", "res_last")})
+    return fts, new_tabs
+
+
+def _process_parallel_impl(state: Dict, pkts: Dict[str, jax.Array],
+                           sample_idx=None) -> Tuple[Dict, jax.Array]:
     from repro.core.state import state_slots
     n_slots = state_slots(state)
     sl = packet_slots(pkts, n_slots)
     ts = pkts["ts"].astype(jnp.float32)
     lens = pkts["length"].astype(jnp.float32)
-    feats = []
+    n = ts.shape[0] if sample_idx is None else sample_idx.shape[0]
 
-    # ---- unidirectional ----
-    new_uni = {k: state["uni"][k] for k in state["uni"]}
-    for ki, key in enumerate(("src_mac_ip", "src_ip")):
-        tab = {f: state["uni"][f][ki] for f in ("last_t", "w", "ls", "ss")}
-        atoms, new_tab = stream_pass(tab, sl[key], ts, lens, n_slots)
-        mu, var, sig = _stats(atoms["w"], atoms["ls"], atoms["ss"])
-        feats.append(jnp.stack([atoms["w"], mu, sig], axis=-1))  # (n,ND,3)
-        for f in new_tab:
-            new_uni[f] = new_uni[f].at[ki].set(new_tab[f])
+    # ---- unidirectional: both key types vmapped over the stacked tables ----
+    uni_ids = jnp.stack([sl[k] for k in ("src_mac_ip", "src_ip")])
+    uni_tab = {f: state["uni"][f] for f in ("last_t", "w", "ls", "ss")}
+    atoms, new_uni_tab = jax.vmap(
+        lambda tab, ids: stream_pass(tab, ids, ts, lens, n_slots,
+                                     sample=sample_idx)
+    )(uni_tab, uni_ids)
+    mu, _, sig = _stats(atoms["w"], atoms["ls"], atoms["ss"])
+    uni_feats = jnp.stack([atoms["w"], mu, sig], axis=-1)    # (2, n|m, ND, 3)
 
-    # ---- bidirectional ----
-    new_bi = {k: state["bi"][k] for k in state["bi"]}
-    bi_feats = []
-    for ki, key in enumerate(("channel", "socket")):
-        # directional streams: stream id = slot*2 + dir
-        stream_ids = sl[key] * 2 + sl["dir"]
-        tab = {f: state["bi"][f][ki].reshape(2 * n_slots, N_DECAY)
-               for f in ("last_t", "w", "ls", "ss")}
-        # note: table layout (n_slots, 2, ND) -> stream id slot*2+dir matches
-        atoms, new_tab = stream_pass(tab, stream_ids, ts, lens, 2 * n_slots)
-        bi_k = {f: state["bi"][f][ki] for f in
-                ("sr", "sr_last_t", "res_last")}
-        bi_k["w"] = new_tab["w"].reshape(n_slots, 2, N_DECAY)
-        bi_k["ls"] = new_tab["ls"].reshape(n_slots, 2, N_DECAY)
-        bi_k["ss"] = new_tab["ss"].reshape(n_slots, 2, N_DECAY)
-        # stale-opposite fallback must be the PRE-batch table values:
-        bi_k_pre = dict(bi_k)
-        for f in ("w", "ls", "ss"):
-            bi_k_pre[f] = state["bi"][f][ki]
-        fts, upd = channel_pass(bi_k_pre, sl[key], sl["dir"], ts, lens,
-                                atoms, n_slots)
-        bi_feats.append(fts)
-        for f in ("last_t", "w", "ls", "ss"):
-            new_bi[f] = new_bi[f].at[ki].set(
-                new_tab[f].reshape(n_slots, 2, N_DECAY))
-        for f in ("sr", "sr_last_t", "res_last"):
-            new_bi[f] = new_bi[f].at[ki].set(upd[f])
+    # ---- bidirectional: both key types vmapped, one argsort each ----
+    bi_slots = jnp.stack([sl[k] for k in ("channel", "socket")])
+    bi_tabs = {f: state["bi"][f] for f in
+               ("last_t", "w", "ls", "ss", "sr", "sr_last_t", "res_last")}
+    bi_feats, new_bi_tabs = jax.vmap(
+        lambda tabs, s: _bi_key_pass(tabs, s, sl["dir"], ts, lens, n_slots,
+                                     sample=sample_idx)
+    )(bi_tabs, bi_slots)                                     # (2, n|m, ND, 7)
 
-    n = ts.shape[0]
-    out = jnp.concatenate(
-        [f.reshape(n, -1) for f in feats] +
-        [f.reshape(n, -1) for f in bi_feats], axis=-1)
-    new_state = {"uni": new_uni, "bi": new_bi}
+    out = jnp.concatenate([
+        jnp.moveaxis(uni_feats, 0, 1).reshape(n, -1),
+        jnp.moveaxis(bi_feats, 0, 1).reshape(n, -1)], axis=-1)
+    new_state = {"uni": {**new_uni_tab, "rr": state["uni"]["rr"]},
+                 "bi": {**new_bi_tabs, "rr": state["bi"]["rr"]}}
     return new_state, out
+
+
+def process_parallel_sampled(state: Dict, pkts: Dict[str, jax.Array],
+                             sample_idx: jax.Array) -> Tuple[Dict, jax.Array]:
+    """Exact-mode FC where only ``sample_idx``'s feature rows are emitted.
+
+    The flow-table update still covers every packet (identical new state to
+    :func:`process_parallel`); the emitted rows are bit-identical to
+    ``process_parallel(...)[1][sample_idx]`` — the per-row math is the
+    same, it just never materialises the unsampled rows.  Built for the
+    fused serving step (serving/fused.py), which samples records *after*
+    feature computation exactly as the paper prescribes, so packets that
+    close no epoch never pay the statistics-assembly cost.  Unjitted: the
+    caller fuses it into its own jit.
+    """
+    return _process_parallel_impl(state, pkts, sample_idx)
+
+
+process_parallel = jax.jit(_process_parallel_impl)
+process_parallel.__doc__ = (
+    "Exact-mode Peregrine FC via segmented scans. Same I/O as "
+    "``process_serial(..., mode='exact')``.")

@@ -34,6 +34,24 @@ def epoch_sample(features: jax.Array, epoch: int, offset: int = 0):
     return features[jnp.asarray(idx)], idx
 
 
+def epoch_gather(n_packets: int, epoch: int, offset_mod):
+    """jit-safe on-device twin of :func:`epoch_indices`.
+
+    ``offset_mod`` is a traced scalar carrying ``offset % epoch`` (only the
+    residue matters for boundary placement, so the device never needs the
+    full int64 stream position).  Returns ``(idx, count)`` where ``idx`` is
+    a fixed-size ``(ceil(n/epoch),)`` int32 vector of within-batch record
+    positions, zero-padded past ``count`` — the shape is static, so the
+    gather lives inside a fused jit and only the sampled rows ever need to
+    cross to the host.
+    """
+    max_rec = max(1, -(-n_packets // epoch))
+    glob = jnp.arange(n_packets, dtype=jnp.int32) + offset_mod + 1
+    mask = (glob % epoch) == 0
+    idx = jnp.nonzero(mask, size=max_rec, fill_value=0)[0].astype(jnp.int32)
+    return idx, mask.sum()
+
+
 def packet_sample_indices(n_packets: int, rate: int, offset: int = 0) -> np.ndarray:
     """Raw-packet sampling (the baseline's 1:rate pre-FC sampling)."""
     return epoch_indices(n_packets, rate, offset)

@@ -84,6 +84,15 @@ class KitNet:
     out_max: jnp.ndarray
 
 
+# a KitNet is a pytree of its arrays, so a fitted net can cross a jit
+# boundary as a plain argument (the fused serving step takes it that way)
+jax.tree_util.register_pytree_node(
+    KitNet,
+    lambda net: ((net.idx, net.mask, net.params, net.norm_min, net.norm_max,
+                  net.out_min, net.out_max), None),
+    lambda _, leaves: KitNet(*leaves))
+
+
 def _pad_clusters(clusters: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
     k = len(clusters)
     m = max(len(c) for c in clusters)

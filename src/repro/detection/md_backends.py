@@ -164,6 +164,20 @@ def score_records(net, feats: np.ndarray, backend: str = "einsum",
     return np.asarray(_REGISTRY[name].score(net, X, **kw))
 
 
+def md_score_fn(backend: str = "einsum", **kw) -> Callable:
+    """The selected backend's *traceable* scoring callable ``fn(net, X)``.
+
+    ``score_records`` wraps the result in host arrays; this accessor hands
+    out the raw jax-level function instead so a caller can inline the MD
+    stage into a larger jit (the fused serving step) — ``net`` is a
+    :class:`~repro.detection.kitnet.KitNet` pytree, ``X`` a (B, F) jnp
+    array, and the return value stays on device.
+    """
+    name = validate_md_options(backend, kw)
+    score = _REGISTRY[name].score
+    return lambda net, X: score(net, X, **kw)
+
+
 def ensemble_rmse_records(params, idx, mask, xn, backend: str = "einsum",
                           **kw) -> jnp.ndarray:
     """The ensemble stage alone: normalised records (B, F) -> (B, k) RMSE.

@@ -19,6 +19,17 @@ Both compute stages are selectable by name: ``backend=`` picks the FC
 implementation (``repro.core.backends``), ``md_backend=`` the scoring
 implementation (``repro.detection.md_backends`` — einsum or the fused
 Pallas ensemble kernel).
+
+The inference path additionally fuses the whole per-chunk pipeline —
+FC → on-device epoch gather → KitNET scoring — into ONE donated jit
+(``serving/fused.py``; on by default for exact-mode services, ``fused=``
+overrides).  Flow-table state stays resident on device across chunks and
+only the sampled ``(indices, scores, alarms)`` ever cross to the host;
+``process_stream`` dispatches chunk k+1 before draining chunk k's results,
+so the host never serialises on per-chunk transfers.  Donation contract
+(DESIGN.md §8): the state handle passed into a fused step is consumed —
+snapshot with ``jax.tree_util.tree_map(jnp.copy, svc.state)``, never by
+aliasing the tree.
 """
 from __future__ import annotations
 
@@ -41,7 +52,8 @@ class DetectionService:
                  mode: str = "exact", threshold: Optional[float] = None,
                  backend: Optional[str] = None,
                  md_backend: Optional[str] = None,
-                 md_kw: Optional[Dict] = None, **backend_kw):
+                 md_kw: Optional[Dict] = None,
+                 fused: Optional[bool] = None, **backend_kw):
         self.epoch = epoch
         self.mode = mode
         self.backend = resolve_backend(backend if backend is not None
@@ -52,9 +64,16 @@ class DetectionService:
             md_backend if md_backend is not None else default_md_backend(),
             self.md_kw)
         self.backend_kw = backend_kw            # e.g. shards= for "sharded"
+        # fused device-resident inference: default on wherever the exact
+        # batch pipeline runs (every backend supports it; the switch
+        # approximation mode stays on the staged oracle path)
+        self.fused = (mode == "exact") if fused is None else bool(fused)
         self.state = init_state(n_slots)
         self.net: Optional[KitNet] = None
-        self.threshold = threshold
+        # thresholds are kept f32-representable so the fused (device, f32)
+        # and staged (numpy) comparisons agree bit-for-bit
+        self.threshold = (None if threshold is None
+                          else float(np.float32(threshold)))
         self.pkt_count = 0
         self._train_feats = []
 
@@ -105,14 +124,52 @@ class DetectionService:
         scores = score_records(self.net, train, backend=self.md_backend,
                                **self.md_kw)
         if self.threshold is None:
-            self.threshold = float(np.quantile(scores, 1.0 - fpr))
+            self.threshold = float(np.float32(np.quantile(scores, 1.0 - fpr)))
         self._train_feats = []
 
     # ---- inference phase ----
-    def process(self, pkts: Dict[str, np.ndarray]
+    def _fused_step(self):
+        from repro.serving.fused import make_fused_step
+        return make_fused_step(backend=self.backend, mode=self.mode,
+                               backend_kw=self.backend_kw,
+                               md_backend=self.md_backend, md_kw=self.md_kw,
+                               epoch=self.epoch)
+
+    def _dispatch_fused(self, pkts: Dict[str, np.ndarray]):
+        """Launch one fused chunk; returns device futures, does NOT block.
+
+        ``self.state`` is donated to the step and replaced by the returned
+        handle — the previous handle is dead from here on (DESIGN.md §8).
+        """
+        n = len(pkts["ts"])
+        base = self.pkt_count
+        self.state, idx, scores, alarms, count = self._fused_step()(
+            self.state, self.net, np.float32(self.threshold),
+            np.int32(base % self.epoch), to_jnp(pkts))
+        self.pkt_count += n
+        return base, idx, scores, alarms, count
+
+    @staticmethod
+    def _drain_fused(out) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Block on one dispatched chunk; only the sampled rows transfer."""
+        base, idx, scores, alarms, count = out
+        c = int(count)
+        return (np.asarray(idx)[:c].astype(np.int64) + base,
+                np.asarray(scores)[:c], np.asarray(alarms)[:c])
+
+    def process(self, pkts: Dict[str, np.ndarray],
+                fused: Optional[bool] = None
                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Returns (global_record_indices, rmse_scores, alarms)."""
+        """Returns (global_record_indices, rmse_scores, alarms).
+
+        ``fused=`` overrides the service default: True runs the one-jit
+        device-resident step, False the staged FC → numpy sampling → MD
+        path.  Outputs are bit-identical between the two for the
+        serial-semantics FC backends (tests/test_fused.py).
+        """
         assert self.net is not None, "call fit() first"
+        if self.fused if fused is None else fused:
+            return self._drain_fused(self._dispatch_fused(pkts))
         feats = self._fc(pkts)
         base = self.pkt_count
         idx = epoch_indices(len(feats), self.epoch, base)
@@ -123,19 +180,41 @@ class DetectionService:
                                backend=self.md_backend, **self.md_kw)
         return idx + base, scores, scores > self.threshold
 
-    def process_stream(self, pkts: Dict[str, np.ndarray], chunk: int = 4096
+    def process_stream(self, pkts: Dict[str, np.ndarray], chunk: int = 4096,
+                       fused: Optional[bool] = None
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Stream a long trace through ``process`` in fixed-size chunks,
-        carrying flow-table state and the running packet count across chunk
-        boundaries.  Returns concatenated (global_record_indices, scores,
-        alarms) — identical to a single ``process`` call on the whole trace
-        for the serial-semantics backends (serial/sharded/pallas)."""
+        """Stream a long trace in fixed-size chunks, carrying flow-table
+        state and the running packet count across chunk boundaries.
+        Returns concatenated (global_record_indices, scores, alarms) —
+        identical to a single ``process`` call on the whole trace for the
+        serial-semantics backends (serial/sharded/pallas).
+
+        On the fused path the loop is pipelined: chunk k+1 is dispatched
+        to the device *before* chunk k's sampled results are drained to
+        the host, so steady-state throughput is bounded by the fused step
+        itself, not by per-chunk host synchronisation."""
+        use_fused = self.fused if fused is None else fused
         idxs, scores, alarms = [], [], []
-        for c in phv_batches(pkts, chunk):
-            i, s, a = self.process(c)
-            idxs.append(i)
-            scores.append(s)
-            alarms.append(a)
+        if use_fused:
+            assert self.net is not None, "call fit() first"
+            pending = None
+            for c in phv_batches(pkts, chunk):
+                nxt = self._dispatch_fused(c)
+                if pending is not None:
+                    out = self._drain_fused(pending)
+                    for acc, v in zip((idxs, scores, alarms), out):
+                        acc.append(v)
+                pending = nxt
+            if pending is not None:
+                out = self._drain_fused(pending)
+                for acc, v in zip((idxs, scores, alarms), out):
+                    acc.append(v)
+        else:
+            for c in phv_batches(pkts, chunk):
+                i, s, a = self.process(c, fused=False)
+                idxs.append(i)
+                scores.append(s)
+                alarms.append(a)
         if not idxs:
             return (np.zeros((0,), dtype=np.int64), np.zeros((0,)),
                     np.zeros((0,), bool))

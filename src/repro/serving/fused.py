@@ -1,0 +1,93 @@
+"""Device-resident fused serving step: fc → epoch gather → MD in ONE jit.
+
+The staged ``DetectionService.process`` path round-trips to the host twice
+per chunk: the full (n, 80) feature matrix is pulled off device to run
+numpy epoch sampling, then the sampled records are pushed back for KitNET
+scoring.  On the measured host that throws away roughly two thirds of the
+scan backend's FC throughput (benchmarks/results/throughput.json) — the
+same CPU-cycle waste Peregrine's offloading exists to eliminate.
+
+This module compiles the whole per-chunk pipeline as one donated jit:
+
+    state, idx, scores, alarms, count = step(state, net, thr, base_mod, pkts)
+
+* ``state`` is **donated** (``donate_argnums``) and carried on device — the
+  flow tables never migrate, and the caller must treat the handle it passed
+  in as consumed (DESIGN.md §8 records the contract).
+* Epoch sampling runs as a jit-safe on-device gather
+  (``repro.core.records.epoch_gather``): fixed-size index vector + valid
+  count, so sampling stays inside the fused computation.
+* FC runs through ``compute_features_sampled``: backends with a native
+  record-sampled path (``scan``) update flow state for every packet but
+  materialise feature statistics only at the sampled rows — sampling still
+  happens *after* feature computation (the paper's architectural move),
+  the unsampled rows just never leave the segmented scans.
+* Only the sampled ``(idx, scores, alarms, count)`` ever cross to the host
+  — never the (n, 80) feature matrix — and they cross *asynchronously*:
+  the step returns device futures, so ``DetectionService.process_stream``
+  can dispatch chunk k+1 before chunk k's results are drained.
+
+Works with any registered FC backend (exact mode) × any MD backend; the
+parity suite (tests/test_fused.py) holds serial-semantics FC backends to
+bit-identical staged-vs-fused outputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import compute_features_sampled, resolve_backend
+from repro.core.records import epoch_gather
+from repro.detection.md_backends import md_score_fn
+
+
+def _freeze(kw: Dict) -> Tuple:
+    return tuple(sorted(kw.items()))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_step(backend: str, mode: str, backend_kw: Tuple,
+                 md_backend: str, md_kw: Tuple, epoch: int) -> Callable:
+    fc_kw = dict(backend_kw)
+    score = md_score_fn(md_backend, **dict(md_kw))
+
+    def step(state, net, threshold, base_mod, pkts):
+        idx, count = epoch_gather(pkts["ts"].shape[0], epoch, base_mod)
+        # record-sampled FC: the flow-table update covers every packet,
+        # but feature rows are only materialised at the epoch boundaries —
+        # sampling happens AFTER feature computation (the paper's move),
+        # yet unsampled packets never pay the statistics-assembly cost
+        state, recs = compute_features_sampled(state, pkts, idx,
+                                               backend=backend, mode=mode,
+                                               **fc_kw)
+        scores = score(net, recs)
+        return state, idx, scores, scores > threshold, count
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_fused_step(backend: str = "scan", mode: str = "exact",
+                    backend_kw: Dict = None, md_backend: str = "einsum",
+                    md_kw: Dict = None, epoch: int = 1024) -> Callable:
+    """Build (or fetch from cache) the fused per-chunk step.
+
+    Returns ``step(state, net, threshold, base_mod, pkts)`` →
+    ``(new_state, idx, scores, alarms, count)`` where every output is a
+    device array: ``idx`` (ceil(n/epoch),) int32 within-chunk record
+    positions zero-padded past ``count``; ``scores``/``alarms`` aligned
+    with ``idx`` (rows past ``count`` are padding garbage — slice by the
+    count before use).  ``base_mod`` is the running packet count modulo
+    ``epoch`` (traced, so chunk position never forces a recompile).
+
+    **Donation contract:** the ``state`` argument is donated — its buffers
+    are invalidated by the call.  Never reuse the passed-in handle; always
+    continue from the returned state, and snapshot with
+    ``jax.tree_util.tree_map(jnp.copy, state)`` (an aliasing ``tree_map``
+    of the identity keeps the doomed buffers).
+    """
+    return _cached_step(resolve_backend(backend), mode,
+                        _freeze(backend_kw or {}), md_backend,
+                        _freeze(md_kw or {}), epoch)

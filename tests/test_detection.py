@@ -122,7 +122,7 @@ def test_streamed_chunks_match_single_batch():
                            backend="sharded", shards=4)
     svc.observe_stream(data["train"], chunk=256)
     svc.fit(fpr=0.05)
-    snap_state = jax.tree_util.tree_map(lambda x: x, svc.state)
+    snap_state = jax.tree_util.tree_map(jax.numpy.copy, svc.state)  # fused steps donate
     snap_count = svc.pkt_count
 
     idx1, s1, a1 = svc.process(data["eval"])

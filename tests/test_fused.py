@@ -1,0 +1,193 @@
+"""Fused device-resident serving step: staged-vs-fused bit parity on every
+attack generator, streaming continuity under donation, the donation
+contract itself, and the scan backend's sort-count / NaN-leak regressions
+(serving/fused.py, core/parallel.py — DESIGN.md §8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import init_state
+from repro.serving import DetectionService
+from repro.traffic import ATTACKS, synth_trace
+from repro.traffic.generator import benign_trace
+
+N_PKTS = 256
+N_SLOTS = 512
+EPOCH = 32
+
+
+def _copy(state):
+    """The documented donation-safe snapshot (DESIGN.md §8): real buffer
+    copies, NOT an aliasing identity tree_map."""
+    return jax.tree_util.tree_map(jnp.copy, state)
+
+
+def _trace(attack: str, seed: int = 0):
+    """Benign background + one attack window at a fixed length so every
+    parametrization shares one fused-step compilation."""
+    rng = np.random.default_rng(seed)
+    ben = benign_trace(160, 6.0, rng)
+    atk = ATTACKS[attack](120, 1.0, 5.0, rng)
+    out = {k: np.concatenate([ben[k], atk[k]]) for k in ben}
+    order = np.argsort(out["ts"], kind="stable")
+    out = {k: v[order][:N_PKTS] for k, v in out.items() if k != "label"}
+    assert len(out["ts"]) == N_PKTS, attack
+    return out
+
+
+@pytest.fixture(scope="module")
+def svc():
+    """One fitted serial-backend service; tests snapshot/restore its state
+    with real copies, so the fused steps' donation cannot corrupt it."""
+    data = synth_trace("mirai", n_train=768, n_benign_eval=64,
+                       n_attack=64, seed=0)
+    s = DetectionService(epoch=EPOCH, n_slots=N_SLOTS, mode="exact",
+                         backend="serial")
+    s.observe_stream(data["train"], chunk=256)
+    s.fit(fpr=0.05)
+    assert s.fused          # exact mode defaults to the fused path
+    return s
+
+
+# ---------------------------------------------------------------------------
+# fused vs staged parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("attack", sorted(ATTACKS))
+def test_fused_matches_staged_bit_identical(svc, attack):
+    """The one-jit fused step and the legacy staged process() must emit
+    bit-identical (global indices, scores, alarms) on a serial-semantics
+    backend, for every attack generator."""
+    pk = _trace(attack)
+    st0, c0 = _copy(svc.state), svc.pkt_count
+    i1, s1, a1 = svc.process(pk, fused=False)
+    svc.state, svc.pkt_count = st0, c0
+    i2, s2, a2 = svc.process(pk, fused=True)
+    assert len(i1) > 0                  # 256 pkts / epoch 32: real records
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_fused_stream_chunked_equals_one_batch(svc):
+    """Chunked fused streaming — with state donated and carried on device
+    across chunk boundaries, and chunk sizes that straddle epoch
+    boundaries — is bit-identical to one fused batch AND to the legacy
+    staged stream."""
+    data = synth_trace("mirai", n_train=64, n_benign_eval=256,
+                       n_attack=256, seed=7)
+    ev = {k: v for k, v in data["eval"].items() if k != "label"}
+    st0, c0 = _copy(svc.state), svc.pkt_count
+    i1, s1, a1 = svc.process(ev, fused=True)
+    svc.state, svc.pkt_count = _copy(st0), c0
+    i2, s2, a2 = svc.process_stream(ev, chunk=96, fused=True)
+    svc.state, svc.pkt_count = st0, c0
+    i3, s3, a3 = svc.process_stream(ev, chunk=96, fused=False)
+    for a, b in ((i1, i2), (s1, s2), (a1, a2), (i1, i3), (s1, s3), (a1, a3)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fused_scan_backend_tracks_staged(svc):
+    """The batch `scan` backend through the fused step: global indices
+    match exactly, scores to float tolerance (same compiled FC graph, so
+    in practice bit-identical — asserted loosely to stay robust across
+    XLA versions)."""
+    data = synth_trace("mirai", n_train=768, n_benign_eval=128,
+                       n_attack=128, seed=1)
+    s = DetectionService(epoch=EPOCH, n_slots=N_SLOTS, mode="exact",
+                         backend="scan")
+    s.observe_stream(data["train"], chunk=256)
+    s.fit(fpr=0.05)
+    ev = {k: v for k, v in data["eval"].items() if k != "label"}
+    st0, c0 = _copy(s.state), s.pkt_count
+    i1, s1, a1 = s.process(ev, fused=False)
+    s.state, s.pkt_count = st0, c0
+    i2, s2, a2 = s.process(ev, fused=True)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_allclose(s1, s2, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# donation contract
+# ---------------------------------------------------------------------------
+def test_fused_step_donates_state_and_service_carries_on(svc):
+    """After a fused step the previous state handle is consumed; the
+    service must continue exclusively from the returned state — staged and
+    fused calls keep interleaving without ever touching a stale buffer."""
+    old = svc.state
+    svc.process(_trace("mirai", seed=9), fused=True)
+    assert svc.state is not old
+    assert any(l.is_deleted() for l in jax.tree_util.tree_leaves(old))
+    # no stale reads afterwards, in either mode and in training observe
+    svc.process(_trace("mirai", seed=10), fused=True)
+    svc.process(_trace("mirai", seed=11), fused=False)
+    svc.observe_benign(_trace("mirai", seed=12))
+
+
+def test_aliasing_snapshot_is_the_wrong_way(svc):
+    """Regression for the documented contract: an identity tree_map keeps
+    the doomed buffers, so reading it after a fused step must raise —
+    callers snapshot with jnp.copy (see _copy above) instead."""
+    alias = jax.tree_util.tree_map(lambda x: x, svc.state)
+    svc.process(_trace("syn_dos", seed=3), fused=True)
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(jax.tree_util.tree_leaves(alias)[0])
+
+
+# ---------------------------------------------------------------------------
+# on-device epoch gather
+# ---------------------------------------------------------------------------
+def test_epoch_gather_matches_host_epoch_indices():
+    from repro.core.records import epoch_gather, epoch_indices
+    for n, epoch, off in [(256, 32, 0), (200, 64, 984), (10, 64, 54),
+                          (10, 64, 0), (64, 64, 63), (1, 1, 0)]:
+        idx, cnt = epoch_gather(n, epoch, jnp.int32(off % epoch))
+        want = epoch_indices(n, epoch, off)
+        c = int(cnt)
+        assert c == len(want), (n, epoch, off)
+        np.testing.assert_array_equal(np.asarray(idx)[:c], want)
+        assert idx.shape[0] == max(1, -(-n // epoch))  # static shape
+
+
+# ---------------------------------------------------------------------------
+# scan backend regressions riding along
+# ---------------------------------------------------------------------------
+def _count_sorts(jaxpr):
+    c = 0
+    for eq in jaxpr.eqns:
+        if eq.primitive.name == "sort":
+            c += 1
+        for p in eq.params.values():
+            for q in (p if isinstance(p, (list, tuple)) else (p,)):
+                if hasattr(q, "jaxpr"):
+                    c += _count_sorts(q.jaxpr)
+    return c
+
+
+def test_scan_backend_at_most_four_sorts_per_batch():
+    """The segmented-scan FC pipeline pays at most one sort per key type
+    (vmapped: one uni + one bi sort primitive) — the directional order and
+    the res_last store-back are derived, not re-sorted."""
+    from repro.core.parallel import _process_parallel_impl
+    st = init_state(256)
+    pk = {k: jnp.zeros((64,), jnp.int32)
+          for k in ("src", "dst", "sport", "dport", "proto")}
+    pk["ts"] = jnp.linspace(0.0, 1.0, 64)
+    pk["length"] = jnp.ones((64,))
+    jaxpr = jax.make_jaxpr(_process_parallel_impl)(st, pk)
+    assert _count_sorts(jaxpr.jaxpr) <= 4
+
+
+def test_seg_last_scan_nan_invalid_rows_contribute_zero():
+    """Regression: a fresh segment whose rows are all invalid must carry an
+    explicit zero — the old ``xr * 0`` propagated NaN from invalid rows."""
+    from repro.core.parallel import seg_last_scan
+    seg_start = jnp.array([True, False, True, False])
+    valid = jnp.array([True, False, False, False])
+    value = jnp.array([5.0, np.nan, np.nan, np.nan])
+    found, val = seg_last_scan(seg_start, valid, value)
+    np.testing.assert_array_equal(np.asarray(found),
+                                  [True, True, False, False])
+    v = np.asarray(val)
+    assert v[0] == 5.0 and v[1] == 5.0
+    assert v[2] == 0.0 and v[3] == 0.0   # NaN here before the fix
