@@ -43,7 +43,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--backend", default="scan",
-                    help="FC backend name (serial/scan/pallas/sharded)")
+                    help="FC backend name "
+                         "(serial/scan/bucketed/pallas/sharded)")
     args = ap.parse_args()
     attacks = ("syn_dos", "mirai", "ssdp_flood") if args.quick else tuple(ATTACKS)
     n = 6000 if args.quick else 20000

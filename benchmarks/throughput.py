@@ -13,15 +13,25 @@ the trace is cut into fixed-size chunks and fed through the backend with
 flow-table state carried across chunk boundaries (exactly what
 ``DetectionService.process_stream`` does in deployment), timed after a full
 warm-up pass.  Any registered backend can be benchmarked by name
-(``--backends serial,scan,pallas,sharded:4,sharded:16`` — ``sharded:S``
-selects the partition count):
+(``--backends serial,scan,bucketed:4,pallas,sharded:4`` — ``sharded:S`` /
+``bucketed:S`` select the partition / bucket count):
 
   * serial  — the per-packet oracle (lax.scan), exact arithmetic;
   * scan    — TPU-native segmented-scan pipeline;
+  * bucketed — the scan pipeline over S balanced flow-hash buckets
+    (core/bucketed.py): per-bucket scans + an O(S) tail-carry combine,
+    mesh-placeable via shard_map over the ``flow_shards`` axis;
   * pallas  — the full-feature Pallas kernel (interpret mode on CPU; on TPU
     this is the line-rate path);
   * sharded — hash-partitioned flow tables, S shards vmapped (or placed on
     a mesh); serial per-packet semantics inside each shard.
+
+Interpret-mode pallas rows cost ~60x scan wall time on CPU while measuring
+an emulator, not a kernel — ``--skip-interpret`` (DEFAULT when no real
+accelerator is present and the backend list is the stock one) drops them.
+Pass ``--no-skip-interpret``, or name pallas in an explicit ``--backends``
+list, to keep them: on real TPU the flag resolves off and pallas is
+measured like everything else.
 
 ``--stage full`` additionally measures the WHOLE pipeline — FC -> per-epoch
 record sampling -> per-chunk MD scoring — for every (fc_backend x
@@ -59,20 +69,25 @@ ratio — compare rows from the same idle-host run only.
 The TPU projection for the scan pipeline is derived from its roofline bytes
 (see EXPERIMENTS.md §Perf — Peregrine pipeline).
 
-Note on sharded-vs-scan on this host: the sharded backend keeps the serial
-oracle's per-packet scan *inside* each shard, and every shard scans the
-full packet batch (non-members are redirected to a discarded scratch row),
-so on ONE device it does ~S× the serial oracle's work on the same
-n-sequential-step critical path — expect ``sharded`` to land in
-``serial``'s speed class (per-step dispatch overhead hides the S× work at
-small S; large S drops below serial) and far below ``scan``.  Its win is
-capacity/placement, not single-host pps: S× flow slots spread over mesh
-devices (the ``flow_shards`` axis), each device holding 1/S of the state
-in fast memory and doing 1/S of the member updates — the switch's
-partitioned SRAM, TPU VMEM.  All backends are measured in ``exact`` mode
-so the serial/sharded/scan rates are directly comparable; the benchmark
-records them so the crossover can be re-checked on real multi-device
-hardware.
+Note on the partitioned backends on this host: ``sharded`` keeps the
+serial oracle's per-packet scan *inside* each shard and every shard walks
+the full packet batch, so on ONE device it does ~S× the serial work on the
+same packet-serial critical path — it lands in ``serial``'s speed class,
+far below ``scan``; its win is slot capacity and mesh placement of the
+*tables* (switch-partitioned SRAM → TPU VMEM), and it remains the only
+partitioned backend for ``switch``-mode arithmetic.  ``bucketed``
+supersedes it for exact-mode throughput: it partitions the *packets* (S
+balanced buckets of the flow-hash-sorted batch, scanned independently), so
+per-bucket work is 1/S of the batch and the buckets are mesh-placeable via
+``shard_map``.  On one CPU device the buckets serialise onto the same
+cores, so expect ``bucketed:S`` ≈ ``scan`` (within the chunk-dispatch
+overhead of the extra carry combine) rather than an S× win — the
+multiplier needs multiple devices; ``--assert-bucketed-speedup`` gates the
+single-host invariants (bucketed ≥ RATIO × scan, and ≥ 2× its sharded:S
+twin when one is in the backend list), re-measuring each pair with the
+two streams *interleaved* so host-load drift between separately-timed
+rows cannot flake the ratio.  All backends are measured in ``exact`` mode
+so rates are directly comparable.
 """
 from __future__ import annotations
 
@@ -97,19 +112,26 @@ import numpy as np
 
 # the serial-semantics backends are orders of magnitude slower per packet:
 # measure them on a truncated stream so the benchmark finishes
-_BACKEND_PKTS = {"serial": 2000, "sharded": 2000, "scan": None, "pallas": 4096}
+_BACKEND_PKTS = {"serial": 2000, "sharded": 2000, "scan": None,
+                 "bucketed": None, "pallas": 4096}
 
-DEFAULT_BACKENDS = "serial,scan,pallas,sharded:4,sharded:16"
+DEFAULT_BACKENDS = ("serial,scan,bucketed:4,bucketed:16,pallas,"
+                    "sharded:4,sharded:16")
+
+# backends taking a ``:S`` partition-count suffix -> the kwarg it sets
+_SUFFIX_KW = {"sharded": "shards", "bucketed": "buckets"}
 
 
 def parse_backend(spec: str) -> Tuple[str, Dict, str]:
-    """``"sharded:16"`` -> (name, backend kwargs, result label)."""
+    """``"sharded:16"``/``"bucketed:4"`` -> (name, kwargs, result label)."""
     if ":" in spec:
         name, arg = spec.split(":", 1)
         name = resolve_backend(name)
-        if name != "sharded":
-            raise ValueError(f"only sharded takes a :S suffix, got {spec!r}")
-        return name, {"shards": int(arg)}, f"sharded{arg}"
+        kw = _SUFFIX_KW.get(name)
+        if kw is None:
+            raise ValueError(f"only {sorted(_SUFFIX_KW)} take a :S suffix, "
+                             f"got {spec!r}")
+        return name, {kw: int(arg)}, f"{name}{arg}"
     return resolve_backend(spec), {}, resolve_backend(spec)
 
 
@@ -133,6 +155,29 @@ def _snap(state):
     return jax.tree_util.tree_map(jnp.copy, state)
 
 
+def _warm_stream(spec: str, data: Dict, n_pkts: int, chunk: int,
+                 n_slots: int):
+    """(stream callable over warmed state, n_packets, resolved name,
+    label) for one backend spec — the shared measurement unit of
+    ``fc_rates`` and the interleaved ``--assert-bucketed-speedup`` gate."""
+    name, kw, label = parse_backend(spec.strip())
+    tr, n, c = _trunc_chunked(data["train"], name, n_pkts, chunk)
+    pk = to_jnp(tr)
+    chunks = [{k: v[i:i + c] for k, v in pk.items()}
+              for i in range(0, n, c)]
+
+    def stream(state):
+        f = None
+        for ch in chunks:
+            state, f = compute_features(state, ch, backend=name,
+                                        mode="exact", **kw)
+        jax.block_until_ready(f)
+        return state
+
+    warm = stream(init_state(n_slots))      # compile + steady-state tables
+    return (lambda: stream(warm)), n, name, label
+
+
 def fc_rates(n_pkts: int = 20000, n_slots: int = 8192,
              backends=tuple(DEFAULT_BACKENDS.split(",")),
              chunk: int = 2048) -> Dict[str, float]:
@@ -143,25 +188,39 @@ def fc_rates(n_pkts: int = 20000, n_slots: int = 8192,
 
     out = {}
     for spec in backends:
-        name, kw, label = parse_backend(spec.strip())
-        tr, n, c = _trunc_chunked(data["train"], name, n_pkts, chunk)
-        pk = to_jnp(tr)
-        chunks = [{k: v[i:i + c] for k, v in pk.items()}
-                  for i in range(0, n, c)]
-
-        def stream(state):
-            f = None
-            for ch in chunks:
-                state, f = compute_features(state, ch, backend=name,
-                                            mode="exact", **kw)
-            jax.block_until_ready(f)
-            return state
-
-        warm = stream(init_state(n_slots))  # compile + steady-state tables
-        reps = 3 if name == "scan" else 1
-        t = timeit(lambda: stream(warm), reps=reps, warmup=0)
+        stream, n, name, label = _warm_stream(spec, data, n_pkts, chunk,
+                                              n_slots)
+        reps = 3 if name in ("scan", "bucketed") else 1
+        t = timeit(stream, reps=reps, warmup=0)
         out[f"{label}_pps"] = n / t
     return out
+
+
+def interleaved_fc_ratio(spec_a: str, spec_b: str, n_pkts: int = 8000,
+                         chunk: int = 2048, n_slots: int = 8192,
+                         rounds: int = 10) -> float:
+    """pps(a) / pps(b) from the two backends' streams ALTERNATED round by
+    round, taking each backend's BEST round.  ``fc_rates`` measures
+    backends minutes apart, so host-load drift between the two
+    measurements can swamp a same-run ratio gate; alternating gives both
+    backends the same contention profile, and the min-time estimator (the
+    classic noise-robust choice) compares their uncontended speeds —
+    identical work on this class of 2-core shared host measures with up to
+    ~4× wall-time spread, which medians do not survive but best-of-rounds
+    does."""
+    data = synth_trace("mirai", n_train=n_pkts, n_benign_eval=1000,
+                       n_attack=1000, seed=0)
+    sa, na, _, _ = _warm_stream(spec_a, data, n_pkts, chunk, n_slots)
+    sb, nb, _, _ = _warm_stream(spec_b, data, n_pkts, chunk, n_slots)
+    ta, tb = [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        sa()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        sb()
+        tb.append(time.perf_counter() - t0)
+    return (na / min(ta)) / (nb / min(tb))
 
 
 def service_rate(n_pkts: int = 8000, epoch: int = 256,
@@ -237,7 +296,7 @@ def pipeline_rates(backends, md_backends=("einsum", "pallas"),
             svc._train_feats = list(feats0)
             svc.threshold = None
             svc.fit()
-            reps = 3 if name in ("scan", "pallas") else 1
+            reps = 3 if name in ("scan", "bucketed", "pallas") else 1
             for fused in (False, True):
                 tag = (f"pipeline{'_fused' if fused else ''}"
                        f"_{label}_x_{svc.md_backend}")
@@ -264,9 +323,13 @@ def pipeline_rates(backends, md_backends=("einsum", "pallas"),
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--backends", default=DEFAULT_BACKENDS,
+    # default=None sentinel: an explicitly typed list — even one equal to
+    # the stock string — counts as "the user named these backends", which
+    # the skip-interpret default respects
+    ap.add_argument("--backends", default=None,
                     help=f"comma list from {available_backends()}; "
-                         "sharded takes a :S shard-count suffix")
+                         "sharded/bucketed take a :S count suffix "
+                         f"(default: {DEFAULT_BACKENDS})")
     ap.add_argument("--md-backends", default="einsum,pallas",
                     help=f"comma list from {available_md_backends()} "
                          "(used by --stage full)")
@@ -286,13 +349,38 @@ def main():
                     help="perf-smoke mode (needs --stage full): exit "
                          "nonzero unless every measured fused pipeline is "
                          "at least RATIO x its staged twin in this run")
+    ap.add_argument("--assert-bucketed-speedup", type=float, default=None,
+                    metavar="RATIO",
+                    help="perf-smoke mode: exit nonzero unless every "
+                         "measured bucketed:S FC rate is at least RATIO x "
+                         "scan in this run AND at least 2x its sharded:S "
+                         "twin when one was measured alongside")
+    ap.add_argument("--skip-interpret", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="drop interpret-mode pallas rows (default: on "
+                         "when no real accelerator is present and the "
+                         "backend list is the stock one — emulator rows "
+                         "dominate CPU wall time; --no-skip-interpret or "
+                         "an explicit --backends list keeps them)")
     args = ap.parse_args()
     n = 8000 if args.quick else 40000
-    backends = tuple(b.strip() for b in args.backends.split(",") if b.strip())
+    stock_list = args.backends is None
+    backend_str = DEFAULT_BACKENDS if stock_list else args.backends
+    backends = tuple(b.strip() for b in backend_str.split(",") if b.strip())
+    skip_interp = args.skip_interpret
+    if skip_interp is None:
+        skip_interp = jax.default_backend() == "cpu" and stock_list
+    if skip_interp:
+        kept = tuple(b for b in backends
+                     if parse_backend(b)[0] != "pallas")
+        if kept != backends:
+            print("skip-interpret: dropping interpret-mode pallas rows "
+                  "(--no-skip-interpret keeps them)")
+        backends = kept
     fc = fc_rates(n_pkts=n, backends=backends, chunk=args.chunk)
     md = md_rate()
     with_service = (args.service if args.service is not None
-                    else args.backends == DEFAULT_BACKENDS)
+                    else stock_list)
     svc = (service_rate(n_pkts=min(n, 8000), chunk=args.chunk)
            if with_service else None)
     rates = (1, 64, 1024, 32768)
@@ -301,16 +389,21 @@ def main():
     curve_fc = fc.get("scan_pps", max(fc.values()))
     curve = {r: min(curve_fc, md * r) for r in rates}
     sharded = {k: v for k, v in fc.items() if k.startswith("sharded")}
+    bucketed = {k: v for k, v in fc.items() if k.startswith("bucketed")}
     note = ("on-CPU single-core; Fig8 shape: throughput rises with "
             "sampling rate until FC-bound")
     if sharded and "scan_pps" in fc:
         best = max(sharded.values())
         if best <= fc["scan_pps"]:
             note += ("; sharded<=scan on this host: one device pays ~S x "
-                     "serial work (every shard scans the full batch) on "
-                     "the same packet-serial critical path — sharding "
-                     "buys slot capacity/mesh placement, not single-host "
-                     "pps (see module docstring)")
+                     "serial work on the packet-serial oracle path — "
+                     "sharded's win is slot capacity / switch-mode "
+                     "support; use bucketed:S for exact-mode partitioned "
+                     "throughput (see module docstring)")
+    if bucketed and "scan_pps" in fc:
+        note += ("; bucketed:S ~ scan on a single device (buckets "
+                 "serialise onto the same cores; the multiplier needs a "
+                 "mesh — see module docstring)")
     out = {**fc, "md_records_per_s": md,
            "stable_pps_at_rate": curve,
            "note": note}
@@ -348,6 +441,41 @@ def main():
             raise SystemExit("fused pipeline slower than staged: "
                              + "; ".join(bad))
         print(f"fused >= {ratio}x staged on all {pairs} measured pairs")
+    if args.assert_bucketed_speedup is not None:
+        ratio = args.assert_bucketed_speedup
+        b_specs = [b for b in backends
+                   if parse_backend(b)[0] == "bucketed"]
+        if not b_specs:
+            raise SystemExit("--assert-bucketed-speedup needs at least one "
+                             "bucketed:S entry in --backends")
+        if not any(parse_backend(b)[0] == "scan" for b in backends):
+            raise SystemExit("--assert-bucketed-speedup needs scan in "
+                             "--backends (the gate is a same-run ratio)")
+        # the gate re-measures each pair INTERLEAVED (round-robin), so
+        # host-load drift between two minutes-apart fc_rates rows cannot
+        # flake a ratio that is stable under equal contention
+        shard_specs = {parse_backend(b)[1].get("shards"): b
+                       for b in backends
+                       if parse_backend(b)[0] == "sharded"}
+        bad = []
+        for spec in b_specs:
+            s = parse_backend(spec)[1].get("buckets")
+            r = interleaved_fc_ratio(spec, "scan", n_pkts=min(n, 8000),
+                                     chunk=args.chunk)
+            print(f"gate: {spec} / scan interleaved ratio {r:.2f}")
+            if r < ratio:
+                bad.append(f"{spec} = {r:.2f}x scan < {ratio}x")
+            twin = shard_specs.get(s)
+            if twin is not None:
+                rt = interleaved_fc_ratio(spec, twin, n_pkts=2000,
+                                          chunk=args.chunk)
+                print(f"gate: {spec} / {twin} interleaved ratio {rt:.2f}")
+                if rt < 2.0:
+                    bad.append(f"{spec} = {rt:.2f}x {twin} < 2x")
+        if bad:
+            raise SystemExit("bucketed backend too slow: " + "; ".join(bad))
+        print(f"bucketed >= {ratio}x scan (and >= 2x sharded twins) on all "
+              f"{len(b_specs)} gated bucket counts")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ from repro.core.state import (  # noqa: F401
 from repro.core.pipeline import process_serial  # noqa: F401
 from repro.core.parallel import process_parallel  # noqa: F401
 from repro.core.sharded import process_sharded  # noqa: F401
+from repro.core.bucketed import process_bucketed  # noqa: F401
 from repro.core.backends import (  # noqa: F401
     available_backends, compute_features, default_backend, register_backend,
     resolve_backend,

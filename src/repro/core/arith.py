@@ -18,6 +18,17 @@ import jax.numpy as jnp
 _EPS = 1e-12
 
 
+def invert_perm(order: jax.Array) -> jax.Array:
+    """Inverse of a permutation: ``invert_perm(order)[order[i]] == i``.
+
+    The scatter form (`zeros.at[order].set(arange)`) is O(n) — cheaper than
+    a second argsort — and is the canonical way every sorted-order pass in
+    ``core/parallel.py`` maps results back to original packet order.
+    """
+    return jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=order.dtype))
+
+
 def _ilog2(x: jax.Array) -> jax.Array:
     """floor(log2 x) for x>0 (f32), elementwise."""
     return jnp.floor(jnp.log2(jnp.maximum(x, _EPS)))

@@ -21,7 +21,14 @@ Backends (all emit the identical (n, N_FEATURES) layout):
   * ``sharded`` — hash-partitioned flow tables (core/sharded.py): S shards
     executed in parallel (vmap / mesh placement via the ``flow_shards``
     logical axis), bit-identical to ``serial`` in both modes.  Select the
-    partition count with ``shards=S``.
+    partition count with ``shards=S``.  Its per-shard path is the packet-
+    serial oracle, so it is the *switch-mode* partitioning story; for
+    exact-mode throughput use ``bucketed``.
+  * ``bucketed`` — bucketed data-parallel segmented scans
+    (core/bucketed.py): the batch is flow-hash-compacted and cut into S
+    balanced buckets scanned in parallel (``shard_map`` over the
+    ``flow_shards`` mesh axis when bound).  Exact mode only; select the
+    bucket count with ``buckets=S``.
 
 ``register_backend`` remains the extension point for further flow-table
 backends (e.g. multi-host partitions).
@@ -91,6 +98,12 @@ def _sharded(state, pkts, mode: str = "exact", shards: int = 4, **_kw):
     return process_sharded(state, pkts, shards=shards, mode=mode)
 
 
+@register_backend("bucketed")
+def _bucketed(state, pkts, mode: str = "exact", buckets: int = 4, **_kw):
+    from repro.core.bucketed import process_bucketed
+    return process_bucketed(state, pkts, buckets=buckets, mode=mode)
+
+
 def compute_features(state: Dict, pkts: Dict[str, jax.Array],
                      backend: str = "scan", mode: str = "exact",
                      **kw) -> Tuple[Dict, jax.Array]:
@@ -127,7 +140,13 @@ def _scan_sampled(state, pkts, sample_idx, **_kw):
     return process_parallel_sampled(state, pkts, sample_idx)
 
 
+def _bucketed_sampled(state, pkts, sample_idx, buckets: int = 4, **_kw):
+    from repro.core.bucketed import process_bucketed_sampled
+    return process_bucketed_sampled(state, pkts, sample_idx, buckets=buckets)
+
+
 register_sampled_backend("scan", _scan_sampled)
+register_sampled_backend("bucketed", _bucketed_sampled)
 
 
 def compute_features_sampled(state: Dict, pkts: Dict[str, jax.Array],
@@ -139,7 +158,8 @@ def compute_features_sampled(state: Dict, pkts: Dict[str, jax.Array],
     Returns ``(new_state, feats (m, N_FEATURES))`` with ``new_state``
     identical to :func:`compute_features` and ``feats`` row-for-row equal
     to ``compute_features(...)[1][sample_idx]``.  Backends with a native
-    record-sampled path (``scan``) skip materialising the unsampled rows;
+    record-sampled path (``scan``, ``bucketed``) skip materialising the
+    unsampled rows;
     everything else computes the full matrix and gathers.  Traceable — the
     fused serving step (serving/fused.py) inlines it into one jit.
     """

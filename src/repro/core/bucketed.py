@@ -1,0 +1,141 @@
+"""Bucketed mesh-parallel FC engine — shard count as a throughput axis.
+
+``core/sharded.py`` partitions the *flow tables* and replays the serial
+oracle inside each shard: every shard still walks the full packet batch, so
+one host pays ~S× the serial work and adding shards *lowers* single-host
+throughput (BENCH_throughput.json).  This module partitions the *packets*
+instead, on top of the segmented-scan pipeline (``core/parallel.py``):
+
+1. **Compaction.**  The batch is stably sorted by flow hash — the argsort
+   by slot the scan backend already pays, no new sort primitives.  Flow
+   slots ARE hashes (core/state.py), so the sorted order is a flow-hash
+   compaction: every stream is a contiguous run.
+2. **Bucketing.**  The compacted batch is cut into S equal slices (a free
+   ``(n,) -> (S, n/S)`` reshape).  Buckets are *perfectly balanced by
+   construction* — heavy-hitter flows cannot skew them, unlike a
+   slot-modulo partition whose worst-case bucket is the whole batch.  The
+   price is that at most S-1 streams straddle a cut.
+3. **Per-bucket scans.**  Each bucket runs the segmented atom/latest-value
+   scans independently (depth O(log n/S) instead of O(log n)); an O(S)
+   exclusive combine over per-bucket tail summaries carries the straddling
+   streams — the same associative operator, reassociated (results match
+   the flat ``scan`` backend to a few ulp; bit-identical at S=1; the
+   serial-oracle parity suite holds it to the scan backend's tolerance).
+4. **Scatter-back.**  Results return to original packet order through the
+   one shared inverse permutation (``core/arith.invert_perm``), exactly as
+   the flat scan does.
+
+Placement: on one device the bucket axis is a vectorised batch dimension.
+When a mesh is bound and the ``flow_shards`` logical axis has a rule
+(distributed/sharding.py), the per-bucket local scans run under
+``shard_map`` over that axis — each device scans only its buckets; the
+O(S) tail combine and the elementwise fix-up stay outside (they are
+negligible).  Ragged batches are padded to a bucket multiple with
+sentinel-slot packets that never store back and are never emitted.
+
+``process_bucketed_sampled`` is the record-sampled twin for the fused
+serving step (DESIGN.md §8/§9), registered in ``core/backends`` so a
+``backend="bucketed"`` service gets the device-resident fast path for free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+
+from repro.core.parallel import _process_parallel_impl
+from repro.distributed.sharding import ambient_mesh, flow_shards_binding
+
+try:  # moved out of jax.experimental in newer releases
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover - jax >= 0.6 spelling
+    from jax import shard_map
+
+
+def _resolve_placement(buckets: int):
+    """(mesh, binding) for shard_map over the bucket axis, or (None, None).
+
+    Resolved OUTSIDE jit (like core/sharded.py) so the ambient mesh/rule
+    participates in the jit cache key — toggling ``use_rules`` retraces
+    instead of silently reusing an executable compiled under a different
+    placement.  Falls back to single-device vectorisation when no mesh is
+    bound, the ``flow_shards`` rule is unbound, the mesh lacks the bound
+    axes, or the bucket count does not divide over the axis size.
+    """
+    binding = flow_shards_binding()
+    if binding is None:
+        return None, None
+    mesh = ambient_mesh()
+    if mesh is None:
+        return None, None
+    axes = binding if isinstance(binding, tuple) else (binding,)
+    if not all(a in mesh.axis_names for a in axes):
+        return None, None
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if size < 1 or buckets % size:
+        return None, None
+    return mesh, binding
+
+
+@functools.lru_cache(maxsize=None)
+def _make_smap(mesh, binding):
+    """A transform wrapping the local per-bucket scans in ``shard_map``
+    over the bucket (leading) axis.  ``None`` when unplaced — the scans
+    then run as a plain vectorised batch dimension on one device.  Cached
+    so repeated calls under one placement share jit cache entries.
+    """
+    if mesh is None:
+        return None
+    from jax.sharding import PartitionSpec as P
+    spec = P(binding)  # leading (bucket) axis sharded, rest replicated
+
+    def smap(fn):
+        # the local scans are collective-free (each bucket is independent),
+        # so in/out specs are a plain prefix spec over every leaf
+        return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)
+
+    return smap
+
+
+@functools.lru_cache(maxsize=None)
+def _bucketed_jit(buckets: int, mesh, binding):
+    smap = _make_smap(mesh, binding)
+
+    @jax.jit
+    def run(state, pkts):
+        return _process_parallel_impl(state, pkts, chunks=buckets, smap=smap)
+
+    return run
+
+
+def process_bucketed(state: Dict, pkts: Dict[str, jax.Array],
+                     buckets: int = 4, mode: str = "exact"
+                     ) -> Tuple[Dict, jax.Array]:
+    """Bucketed data-parallel FC: same I/O as ``process_parallel``, the
+    batch cut into ``buckets`` balanced flow-hash buckets scanned in
+    parallel.  Exact arithmetic only — ``switch`` mode raises; pick the
+    ``serial``/``sharded`` oracle backends for the approximated
+    arithmetic (they are the only packet-serial paths)."""
+    if buckets < 1:
+        raise ValueError(f"buckets must be >= 1, got {buckets}")
+    if mode != "exact":
+        raise ValueError("bucketed backend is exact-mode only")
+    mesh, binding = _resolve_placement(buckets)
+    return _bucketed_jit(buckets, mesh, binding)(state, pkts)
+
+
+def process_bucketed_sampled(state: Dict, pkts: Dict[str, jax.Array],
+                             sample_idx: jax.Array, buckets: int = 4
+                             ) -> Tuple[Dict, jax.Array]:
+    """Record-sampled bucketed FC for the fused serving step: state update
+    covers every packet, feature rows materialise only at ``sample_idx``
+    (row-for-row identical to slicing the full output).  Unjitted — the
+    caller (serving/fused.py) inlines it into its own donated jit; the
+    ambient placement is resolved at trace time."""
+    mesh, binding = _resolve_placement(buckets)
+    smap = _make_smap(mesh, binding)
+    return _process_parallel_impl(state, pkts, sample_idx,
+                                  chunks=buckets, smap=smap)

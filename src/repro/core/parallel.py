@@ -24,6 +24,20 @@ order comes from the (slot, time) channel sort via segmented cumsum ranks
 same permutation instead of re-sorting by the composite key —
 ``tests/test_fused.py`` pins the sort count at ≤ 4.
 
+Scan primitives are *fused across atoms*: one stacked ``associative_scan``
+over ``(n, N_DECAY, 3)`` carries the three decayed atoms (w, LS, SS) of a
+stream table, and one stacked latest-value scan over ``(n, 2, N_DECAY, 4)``
+carries both directions' stale atoms AND last-residuals of a channel pass —
+4 ``associative_scan`` invocations per batch instead of the 11 the unfused
+code paid (``tests/test_bucketed.py`` pins the counts).
+
+Both segmented scans also run in *chunked two-level* form (``chunks=S``):
+the flow-hash-sorted batch is cut into S equal slices, each slice scanned
+independently (depth O(log n/S), mesh-placeable — ``core/bucketed.py``),
+and an O(S) exclusive combine over per-chunk tails carries segments that
+straddle a cut.  Chunked results equal the flat scan up to fp
+reassociation (a few ulp; bit-identical at S=1).
+
 ``process_parallel_sampled`` is the record-sampled variant for the fused
 serving step (DESIGN.md §8): flow-state updates cover every packet, but
 feature statistics are only materialised at the sampled rows.
@@ -49,52 +63,110 @@ _LAM = jnp.asarray(LAMBDAS, jnp.float32)
 # ---------------------------------------------------------------------------
 # segmented-scan primitives
 # ---------------------------------------------------------------------------
-def seg_linear_scan(seg_start, delta, x):
-    """Segmented A_i = delta_i * A_{i-1} + x_i (A resets at segment starts).
-
-    seg_start: (n,) bool; delta, x: (n, ...) broadcastable. Returns A (n, ...).
-    """
-    f = seg_start
-    while f.ndim < delta.ndim:
-        f = f[..., None]
-    f = jnp.broadcast_to(f, delta.shape)
-
-    def combine(l, r):
-        fl, sl, al = l
-        fr, sr, ar = r
-        return (fl | fr,
-                jnp.where(fr, sr, sl * sr),
-                jnp.where(fr, ar, al * sr + ar))
-
-    _, _, a = jax.lax.associative_scan(combine, (f, delta, x), axis=0)
+def _expand(a, ndim):
+    """Append trailing singleton dims until ``a.ndim == ndim``."""
+    while a.ndim < ndim:
+        a = a[..., None]
     return a
 
 
-def seg_last_scan(seg_start, valid, value):
+def _linear_combine(l, r):
+    fl, sl, al = l
+    fr, sr, ar = r
+    return (fl | fr,
+            jnp.where(fr, sr, sl * sr),
+            jnp.where(fr, ar, al * sr + ar))
+
+
+def _last_combine(l, r):
+    fl, vl, xl = l
+    fr, vr, xr = r
+    found = jnp.where(fr, vr, vl | vr)
+    # a fresh segment with no valid element must contribute an explicit
+    # zero: ``xr * 0`` would propagate NaN/inf from invalid rows
+    val = jnp.where(fr, jnp.where(vr, xr, jnp.zeros_like(xr)),
+                    jnp.where(vr, xr, xl))
+    return (fl | fr, found, val)
+
+
+def _chunk2(a, chunks):
+    """(n, ...) -> (chunks, n//chunks, ...) — a free row-major reshape."""
+    return a.reshape((chunks, a.shape[0] // chunks) + a.shape[1:])
+
+
+def _excl_shift(t, identity):
+    """Inclusive chunk-tail scan -> exclusive carry (identity at chunk 0)."""
+    return jnp.concatenate([jnp.full_like(t[:1], identity), t[:-1]], axis=0)
+
+
+def seg_linear_scan(seg_start, delta, x, chunks: int = 1, smap=None):
+    """Segmented A_i = delta_i * A_{i-1} + x_i (A resets at segment starts).
+
+    seg_start: (n,) bool; delta, x: (n, ...) broadcastable (``delta`` may be
+    narrower than ``x`` in trailing dims — it broadcasts inside the
+    combine).  Returns A with ``x``'s shape.
+
+    ``chunks=S`` runs the two-level form: S independent local scans over
+    equal slices of the array (each slice's flows are disjoint except for
+    segments straddling a cut), then one exclusive combine over the S
+    per-chunk tail summaries, then an O(n) elementwise fix-up — the same
+    associative combine, reassociated.  ``smap`` optionally wraps the local
+    scans (e.g. ``shard_map`` over a mesh axis — core/bucketed.py); it must
+    be a transform ``fn -> fn`` preserving signatures.
+    """
+    f = _expand(seg_start, delta.ndim)
+    if chunks <= 1:
+        _, _, a = jax.lax.associative_scan(
+            _linear_combine, (f, delta, x), axis=0)
+        return a
+    fc, dc, xc = (_chunk2(a, chunks) for a in (f, delta, x))
+
+    def local(fc, dc, xc):
+        return jax.lax.associative_scan(_linear_combine, (fc, dc, xc),
+                                        axis=1)
+
+    lf, ls, la = (local if smap is None else smap(local))(fc, dc, xc)
+    # carry across cuts: segmented combine over per-chunk tails, exclusive
+    _, _, pa = jax.lax.associative_scan(
+        _linear_combine, (lf[:, -1], ls[:, -1], la[:, -1]), axis=0)
+    pa = _excl_shift(pa, 0)
+    # combine(carry, local) per element; lf kills the carry as soon as the
+    # chunk has seen a real segment start
+    a = jnp.where(lf, la, pa[:, None] * ls + la)
+    return a.reshape((x.shape[0],) + a.shape[2:])
+
+
+def seg_last_scan(seg_start, valid, value, chunks: int = 1, smap=None):
     """Segmented latest-valid-value (inclusive). Returns (found, last_value).
 
-    ``found[i]`` False means no valid element yet in i's segment.
+    ``found[i]`` False means no valid element yet in i's segment.  ``valid``
+    may carry extra trailing dims narrower than ``value`` (e.g. a per-
+    direction mask ``(n, 2)`` against values ``(n, 2, ND, k)``) — it
+    broadcasts inside the combine, and ``found`` is returned at the
+    broadcast shape of ``valid``.  ``chunks``/``smap`` as in
+    :func:`seg_linear_scan`.
     """
-    f = seg_start
-    v = valid
-    while f.ndim < value.ndim:
-        f = f[..., None]
-        v = v[..., None]
-    f = jnp.broadcast_to(f, value.shape)
-    v = jnp.broadcast_to(v, value.shape)
+    f = _expand(seg_start, value.ndim)
+    v = _expand(valid, value.ndim)
+    if chunks <= 1:
+        _, found, val = jax.lax.associative_scan(
+            _last_combine, (f, v, value), axis=0)
+        return found, val
+    fc, vc, xc = (_chunk2(a, chunks) for a in (f, v, value))
 
-    def combine(l, r):
-        fl, vl, xl = l
-        fr, vr, xr = r
-        found = jnp.where(fr, vr, vl | vr)
-        # a fresh segment with no valid element must contribute an explicit
-        # zero: ``xr * 0`` would propagate NaN/inf from invalid rows
-        val = jnp.where(fr, jnp.where(vr, xr, jnp.zeros_like(xr)),
-                        jnp.where(vr, xr, xl))
-        return (fl | fr, found, val)
+    def local(fc, vc, xc):
+        return jax.lax.associative_scan(_last_combine, (fc, vc, xc), axis=1)
 
-    _, found, val = jax.lax.associative_scan(combine, (f, v, value), axis=0)
-    return found, val
+    lf, lv, lx = (local if smap is None else smap(local))(fc, vc, xc)
+    _, pv, px = jax.lax.associative_scan(
+        _last_combine, (lf[:, -1], lv[:, -1], lx[:, -1]), axis=0)
+    pv = _excl_shift(pv, False)
+    px = _excl_shift(px, 0)
+    found = jnp.where(lf, lv, pv[:, None] | lv)
+    val = jnp.where(lv, lx, jnp.where(lf, jnp.zeros_like(lx), px[:, None]))
+    n = value.shape[0]
+    return (found.reshape((n,) + found.shape[2:]),
+            val.reshape((n,) + val.shape[2:]))
 
 
 def _segments(sorted_ids):
@@ -129,14 +201,14 @@ def _dir_interleave_perm(start, end, d):
     excl1 = jnp.cumsum(d1) - d1
     rank1 = excl1 - excl1[seg_first]
     pos = seg_first + jnp.where(d == 0, rank0, n0_seg + rank1)
-    return jnp.zeros_like(pos).at[pos].set(ar)
+    return arith.invert_perm(pos)
 
 
 # ---------------------------------------------------------------------------
 # one directional stream table pass
 # ---------------------------------------------------------------------------
 def stream_pass(tab, stream_ids, ts, lens, n_streams, order=None,
-                sample=None):
+                sample=None, chunks: int = 1, smap=None):
     """Vectorised decayed-atom update for one table of streams.
 
     tab: {"last_t","w","ls","ss"} each (n_streams, N_DECAY).
@@ -146,12 +218,17 @@ def stream_pass(tab, stream_ids, ts, lens, n_streams, order=None,
     ``sample`` restricts the returned atoms to those original-order rows
     (the table update always covers every packet) — the fused serving step
     only ever reads the sampled records, so the full-width gather back to
-    packet order is skipped.
+    packet order is skipped.  ``chunks``/``smap`` select the two-level
+    bucketed scan (core/bucketed.py).
+
+    The three decayed atoms ride ONE stacked scan over ``(n, N_DECAY, 3)``
+    (lanes w/ls/ss) — identical per-lane math to three separate scans, a
+    third of the scan dispatches.
     """
     n = stream_ids.shape[0]
     if order is None:
         order = jnp.argsort(stream_ids, stable=True)
-    inv = jnp.zeros_like(order).at[order].set(jnp.arange(n))
+    inv = arith.invert_perm(order)
     sid = stream_ids[order]
     t = ts[order]
     x = lens[order]
@@ -168,19 +245,17 @@ def stream_pass(tab, stream_ids, ts, lens, n_streams, order=None,
     delta = jnp.exp2(-_LAM[None, :] * dt)
     delta = jnp.where(start[:, None] & fresh, 0.0, delta)
 
-    def scan_atom(x_inc):
-        """x_inc: (n, N_DECAY) per-packet increment."""
-        return seg_linear_scan(start, delta, x_inc)
-
-    # fold table carry into the first element: A_1 = delta_1*A_tab + x_1
-    def with_carry(tab_a, x_inc):
-        x0 = jnp.where(start[:, None], x_inc + delta * tab_a[sid], x_inc)
-        return scan_atom(x0)
-
-    ones = jnp.ones((n, N_DECAY))
-    w = with_carry(tab["w"], ones)
-    ls = with_carry(tab["ls"], jnp.broadcast_to(x[:, None], (n, N_DECAY)))
-    ss = with_carry(tab["ss"], jnp.broadcast_to((x ** 2)[:, None], (n, N_DECAY)))
+    # stacked per-packet increments, table carry folded into first elements:
+    # A_1 = delta_1*A_tab + x_1
+    xs = jnp.stack([jnp.ones((n, N_DECAY)),
+                    jnp.broadcast_to(x[:, None], (n, N_DECAY)),
+                    jnp.broadcast_to((x ** 2)[:, None], (n, N_DECAY))],
+                   axis=-1)                               # (n, ND, 3)
+    tab_a = jnp.stack([tab["w"], tab["ls"], tab["ss"]], axis=-1)[sid]
+    x0 = jnp.where(start[:, None, None], xs + delta[..., None] * tab_a, xs)
+    atoms3 = seg_linear_scan(start, delta[..., None], x0,
+                             chunks=chunks, smap=smap)    # (n, ND, 3)
+    w, ls, ss = atoms3[..., 0], atoms3[..., 1], atoms3[..., 2]
 
     # store back last element of each segment (indices unique by construction)
     sid_end = jnp.where(end, sid, n_streams)              # OOB drops
@@ -207,7 +282,8 @@ def _stats(w, ls, ss):
 # channel pass: stale opposite stats + SR recurrence
 # ---------------------------------------------------------------------------
 def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
-                 order=None, dir_gather=None, sample=None):
+                 order=None, dir_gather=None, sample=None, chunks: int = 1,
+                 smap=None):
     """Cross-direction state for ONE bi key type.
 
     bi_k: the per-key-type slices of the bi table (each (n_slots, ...)).
@@ -224,11 +300,15 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
     stack are only materialised at the sampled rows — identical values to
     slicing the full output, row for row, since the per-row math is
     unchanged.
+
+    The per-direction stale atoms AND last-residuals ride ONE stacked
+    latest-value scan over ``(n, 2, N_DECAY, 4)`` (direction axis × lanes
+    w/ls/ss/residual) — one scan dispatch where the unfused code paid four.
     """
     n = slots.shape[0]
     if order is None:
         order = jnp.argsort(slots, stable=True)
-    inv = jnp.zeros_like(order).at[order].set(jnp.arange(n))
+    inv = arith.invert_perm(order)
     sid = slots[order]
     d = dirs[order]
     t = ts[order]
@@ -240,26 +320,31 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
     own_ls = own_atoms["ls"][order]
     own_ss = own_atoms["ss"][order]
 
-    # --- stale opposite-direction atoms: latest same-channel opposite pkt
-    # (the scans run over every packet; the table fallback is applied at
-    # emission time so it is only gathered for emitted rows) ---
-    stacked = jnp.stack([own_w, own_ls, own_ss], axis=-1)      # (n,ND,3)
-    found0, val0 = seg_last_scan(start, d == 0, stacked)
-    found1, val1 = seg_last_scan(start, d == 1, stacked)
-    tabv = jnp.stack([bi_k["w"], bi_k["ls"], bi_k["ss"]], axis=-1)  # (ns,2,ND,3)
-
-    # --- residuals (full width: the SR recurrence consumes every row) ---
+    # --- residual vs own-direction mean (full width: SR consumes every row)
     mu_own, _, _ = _stats(own_w, own_ls, own_ss)
     lens_s = lens[order]
     r = lens_s[:, None] - mu_own                              # (n, ND)
 
-    def latest_res(X, tab_res):
-        valid = d == X
-        found, val = seg_last_scan(start, valid, r)
-        return jnp.where(found, val, tab_res[sid])
+    # --- ONE latest-value scan: latest same-channel packet per direction,
+    # lanes = (w, ls, ss, residual); the table fallback is applied at
+    # emission (atoms) / consumption (residual) time ---
+    lanes = jnp.stack([own_w, own_ls, own_ss, r], axis=-1)    # (n, ND, 4)
+    latest = jnp.broadcast_to(lanes[:, None],
+                              (n, 2) + lanes.shape[1:])       # (n, 2, ND, 4)
+    per_dir = jnp.stack([d == 0, d == 1], axis=1)             # (n, 2)
+    found, val = seg_last_scan(start, per_dir, latest,
+                               chunks=chunks, smap=smap)
+    found0, found1 = found[:, 0], found[:, 1]                 # (n, 1, 1)
+    val0, val1 = val[:, 0, :, :3], val[:, 1, :, :3]           # (n, ND, 3)
+    tabv = jnp.stack([bi_k["w"], bi_k["ls"], bi_k["ss"]], axis=-1)
 
-    r0 = latest_res(0, bi_k["res_last"][:, 0])
-    r1 = latest_res(1, bi_k["res_last"][:, 1])
+    def latest_res(X):
+        fnd = found[:, X, :, 0]                               # (n, 1)
+        return jnp.where(fnd, val[:, X, :, 3],
+                         bi_k["res_last"][:, X][sid])
+
+    r0 = latest_res(0)
+    r1 = latest_res(1)
     r_opp = jnp.where((d == 0)[:, None], r1, r0)
 
     # --- SR recurrence over the whole channel (both directions) ---
@@ -273,7 +358,7 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
     dsr = jnp.where(start[:, None] & fresh, 0.0, dsr)
     x_sr = r * r_opp
     x_sr = jnp.where(start[:, None], x_sr + dsr * bi_k["sr"][sid], x_sr)
-    sr = seg_linear_scan(start, dsr, x_sr)
+    sr = seg_linear_scan(start, dsr, x_sr, chunks=chunks, smap=smap)
 
     # --- bidirectional stats, emitted at the requested rows only ---
     def emit(rows):
@@ -316,7 +401,8 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
     return feats, new_bi
 
 
-def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None):
+def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None,
+                 chunks: int = 1, smap=None):
     """Full bidirectional update for ONE bi key type with ONE argsort.
 
     tabs: the per-key slices of ``state["bi"]`` (last_t/w/ls/ss
@@ -339,13 +425,14 @@ def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None):
     tab = {f: tabs[f].reshape(2 * n_slots, N_DECAY)
            for f in ("last_t", "w", "ls", "ss")}
     atoms, new_tab = stream_pass(tab, slots * 2 + dirs, ts, lens,
-                                 2 * n_slots, order=order_dir)
+                                 2 * n_slots, order=order_dir,
+                                 chunks=chunks, smap=smap)
     # stale-opposite fallback must be the PRE-batch table values
     bi_k_pre = {f: tabs[f] for f in
                 ("sr", "sr_last_t", "res_last", "w", "ls", "ss")}
     fts, upd = channel_pass(bi_k_pre, slots, dirs, ts, lens, atoms, n_slots,
                             order=order, dir_gather=dir_gather,
-                            sample=sample)
+                            sample=sample, chunks=chunks, smap=smap)
     new_tabs = {f: new_tab[f].reshape(n_slots, 2, N_DECAY)
                 for f in ("last_t", "w", "ls", "ss")}
     new_tabs.update({f: upd[f] for f in ("sr", "sr_last_t", "res_last")})
@@ -353,20 +440,38 @@ def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None):
 
 
 def _process_parallel_impl(state: Dict, pkts: Dict[str, jax.Array],
-                           sample_idx=None) -> Tuple[Dict, jax.Array]:
+                           sample_idx=None, chunks: int = 1,
+                           smap=None) -> Tuple[Dict, jax.Array]:
     from repro.core.state import state_slots
     n_slots = state_slots(state)
     sl = packet_slots(pkts, n_slots)
     ts = pkts["ts"].astype(jnp.float32)
     lens = pkts["length"].astype(jnp.float32)
-    n = ts.shape[0] if sample_idx is None else sample_idx.shape[0]
+    n_real = ts.shape[0]
+
+    if chunks > 1:
+        # equal-size chunks need n % chunks == 0: pad with sentinel-slot
+        # packets that sort AFTER every real stream (their own segments at
+        # the tail), never store back (OOB rows drop), and are never
+        # emitted (feature rows are gathered for real packets only)
+        pad = (-n_real) % chunks
+        if pad:
+            sl = {k: jnp.pad(v, (0, pad),
+                             constant_values=0 if k == "dir" else n_slots)
+                  for k, v in sl.items()}
+            ts = jnp.pad(ts, (0, pad), mode="edge")   # keep ts monotone
+            lens = jnp.pad(lens, (0, pad))
+            if sample_idx is None:
+                sample_idx = jnp.arange(n_real)
+    n = n_real if sample_idx is None else sample_idx.shape[0]
 
     # ---- unidirectional: both key types vmapped over the stacked tables ----
     uni_ids = jnp.stack([sl[k] for k in ("src_mac_ip", "src_ip")])
     uni_tab = {f: state["uni"][f] for f in ("last_t", "w", "ls", "ss")}
     atoms, new_uni_tab = jax.vmap(
         lambda tab, ids: stream_pass(tab, ids, ts, lens, n_slots,
-                                     sample=sample_idx)
+                                     sample=sample_idx, chunks=chunks,
+                                     smap=smap)
     )(uni_tab, uni_ids)
     mu, _, sig = _stats(atoms["w"], atoms["ls"], atoms["ss"])
     uni_feats = jnp.stack([atoms["w"], mu, sig], axis=-1)    # (2, n|m, ND, 3)
@@ -377,7 +482,8 @@ def _process_parallel_impl(state: Dict, pkts: Dict[str, jax.Array],
                ("last_t", "w", "ls", "ss", "sr", "sr_last_t", "res_last")}
     bi_feats, new_bi_tabs = jax.vmap(
         lambda tabs, s: _bi_key_pass(tabs, s, sl["dir"], ts, lens, n_slots,
-                                     sample=sample_idx)
+                                     sample=sample_idx, chunks=chunks,
+                                     smap=smap)
     )(bi_tabs, bi_slots)                                     # (2, n|m, ND, 7)
 
     out = jnp.concatenate([
@@ -392,10 +498,11 @@ def process_parallel_sampled(state: Dict, pkts: Dict[str, jax.Array],
                              sample_idx: jax.Array) -> Tuple[Dict, jax.Array]:
     """Exact-mode FC where only ``sample_idx``'s feature rows are emitted.
 
-    The flow-table update still covers every packet (identical new state to
-    :func:`process_parallel`); the emitted rows are bit-identical to
-    ``process_parallel(...)[1][sample_idx]`` — the per-row math is the
-    same, it just never materialises the unsampled rows.  Built for the
+    The flow-table update still covers every packet (same new state as
+    :func:`process_parallel`, to compiler-refusion ulp noise); the emitted
+    rows equal ``process_parallel(...)[1][sample_idx]`` to the same noise
+    — the per-row math is the same, it just never materialises the
+    unsampled rows.  Built for the
     fused serving step (serving/fused.py), which samples records *after*
     feature computation exactly as the paper prescribes, so packets that
     close no epoch never pay the statistics-assembly cost.  Unjitted: the
@@ -404,7 +511,8 @@ def process_parallel_sampled(state: Dict, pkts: Dict[str, jax.Array],
     return _process_parallel_impl(state, pkts, sample_idx)
 
 
-process_parallel = jax.jit(_process_parallel_impl)
+process_parallel = jax.jit(_process_parallel_impl,
+                           static_argnames=("chunks", "smap"))
 process_parallel.__doc__ = (
     "Exact-mode Peregrine FC via segmented scans. Same I/O as "
     "``process_serial(..., mode='exact')``.")

@@ -51,6 +51,43 @@ def set_mesh(mesh):
     return mesh
 
 
+def ambient_mesh():
+    """The physical mesh bound by :func:`set_mesh`, or ``None``.
+
+    Works across jax versions: newer releases track the ambient mesh on the
+    jax side (``jax.set_mesh``), older ones (<= 0.4.x) stash the ``with
+    Mesh(...)`` resource environment in ``thread_resources``.  Callers that
+    need an explicit ``Mesh`` object (e.g. ``shard_map`` in
+    ``core/bucketed.py``) use this instead of threading one by hand.
+    """
+    try:
+        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:  # newer jax: the ambient concrete mesh, when one is set
+        m = jax.sharding.get_mesh()
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def flow_shards_binding():
+    """The normalised ``flow_shards`` rule of the ambient axis rules, or
+    ``None`` when unbound.  Shared by everything that keys compiled
+    executables on the flow-table placement (``core/bucketed.py``'s
+    trace-time resolution and ``serving/fused.py``'s step-cache key), so
+    the two can never drift apart."""
+    rules = current_rules()
+    binding = rules.rules.get("flow_shards") if rules is not None else None
+    if isinstance(binding, list):
+        binding = tuple(binding)
+    return binding
+
+
 def named_shardings(mesh, tree):
     """PartitionSpec/None leaves -> ``NamedSharding`` on ``mesh``.
 

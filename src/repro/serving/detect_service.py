@@ -16,9 +16,10 @@ the sampled records are all that is ever resident, and MD scoring happens
 scores/alarms are bit-identical to a one-batch run).
 
 Both compute stages are selectable by name: ``backend=`` picks the FC
-implementation (``repro.core.backends``), ``md_backend=`` the scoring
-implementation (``repro.detection.md_backends`` — einsum or the fused
-Pallas ensemble kernel).
+implementation (``repro.core.backends`` — e.g. ``backend="bucketed",
+buckets=4`` for the mesh-parallel bucketed scans), ``md_backend=`` the
+scoring implementation (``repro.detection.md_backends`` — einsum or the
+fused Pallas ensemble kernel).
 
 The inference path additionally fuses the whole per-chunk pipeline —
 FC → on-device epoch gather → KitNET scoring — into ONE donated jit

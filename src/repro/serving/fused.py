@@ -18,7 +18,8 @@ This module compiles the whole per-chunk pipeline as one donated jit:
   (``repro.core.records.epoch_gather``): fixed-size index vector + valid
   count, so sampling stays inside the fused computation.
 * FC runs through ``compute_features_sampled``: backends with a native
-  record-sampled path (``scan``) update flow state for every packet but
+  record-sampled path (``scan``, ``bucketed``) update flow state for every
+  packet but
   materialise feature statistics only at the sampled rows — sampling still
   happens *after* feature computation (the paper's architectural move),
   the unsampled rows just never leave the segmented scans.
@@ -42,15 +43,31 @@ import jax.numpy as jnp
 from repro.core.backends import compute_features_sampled, resolve_backend
 from repro.core.records import epoch_gather
 from repro.detection.md_backends import md_score_fn
+from repro.distributed.sharding import ambient_mesh, flow_shards_binding
 
 
 def _freeze(kw: Dict) -> Tuple:
     return tuple(sorted(kw.items()))
 
 
+def _placement_token():
+    """Ambient flow-table placement (mesh + ``flow_shards`` rule).
+
+    Part of the fused-step cache key: the partitioned FC backends
+    (``bucketed``/``sharded``) resolve their mesh placement at trace time,
+    so binding or unbinding a mesh must hand back a *different* step —
+    otherwise the cached executable silently keeps the placement it was
+    first traced under (the exact hazard ``core/bucketed.py`` resolves
+    outside jit to avoid).  Shares the binding lookup with that resolver
+    (``distributed/sharding.flow_shards_binding``) so key and trace can
+    never disagree."""
+    return flow_shards_binding(), ambient_mesh()
+
+
 @functools.lru_cache(maxsize=None)
 def _cached_step(backend: str, mode: str, backend_kw: Tuple,
-                 md_backend: str, md_kw: Tuple, epoch: int) -> Callable:
+                 md_backend: str, md_kw: Tuple, epoch: int,
+                 placement: Tuple = (None, None)) -> Callable:
     fc_kw = dict(backend_kw)
     score = md_score_fn(md_backend, **dict(md_kw))
 
@@ -90,4 +107,5 @@ def make_fused_step(backend: str = "scan", mode: str = "exact",
     """
     return _cached_step(resolve_backend(backend), mode,
                         _freeze(backend_kw or {}), md_backend,
-                        _freeze(md_kw or {}), epoch)
+                        _freeze(md_kw or {}), epoch,
+                        placement=_placement_token())

@@ -40,6 +40,54 @@ def test_seg_linear_scan_matches_serial(n, n_segs, seed):
 
 
 @settings(**SETT)
+@given(st.integers(2, 48), st.integers(1, 5), st.sampled_from([2, 3, 4, 8]),
+       st.integers(0, 10 ** 6))
+def test_seg_linear_scan_chunked_matches_flat(n, n_segs, chunks, seed):
+    """The two-level bucketed form (local scans + tail-carry combine,
+    core/bucketed.py) computes the same segmented recurrence as the flat
+    scan for ANY cut positions — including cuts through the middle of a
+    segment."""
+    if n % chunks:
+        n += chunks - n % chunks
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, n_segs, n))
+    start = np.r_[True, seg[1:] != seg[:-1]]
+    delta = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    x = rng.uniform(-2, 2, n).astype(np.float32)
+    flat = np.asarray(seg_linear_scan(jnp.asarray(start),
+                                      jnp.asarray(delta), jnp.asarray(x)))
+    got = np.asarray(seg_linear_scan(jnp.asarray(start), jnp.asarray(delta),
+                                     jnp.asarray(x), chunks=chunks))
+    np.testing.assert_allclose(got, flat, rtol=2e-4, atol=1e-4)
+
+
+@settings(**SETT)
+@given(st.integers(2, 48), st.integers(1, 4), st.sampled_from([2, 3, 4, 8]),
+       st.integers(0, 10 ** 6))
+def test_seg_last_scan_chunked_matches_flat(n, n_segs, chunks, seed):
+    """Latest-value carry across bucket cuts: found agrees everywhere and
+    value is EXACTLY the flat scan's wherever found=True (selection, not
+    arithmetic — no reassociation error).  Rows with found=False carry an
+    unspecified value in BOTH forms (callers always select through found),
+    so they are excluded."""
+    if n % chunks:
+        n += chunks - n % chunks
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, n_segs, n))
+    start = np.r_[True, seg[1:] != seg[:-1]]
+    valid = rng.random(n) < 0.5
+    val = rng.uniform(-1, 1, n).astype(np.float32)
+    f_flat, v_flat = seg_last_scan(jnp.asarray(start), jnp.asarray(valid),
+                                   jnp.asarray(val))
+    f_ch, v_ch = seg_last_scan(jnp.asarray(start), jnp.asarray(valid),
+                               jnp.asarray(val), chunks=chunks)
+    f_flat = np.asarray(f_flat)
+    np.testing.assert_array_equal(np.asarray(f_ch), f_flat)
+    np.testing.assert_array_equal(np.asarray(v_ch)[f_flat],
+                                  np.asarray(v_flat)[f_flat])
+
+
+@settings(**SETT)
 @given(st.integers(2, 40), st.integers(1, 4), st.integers(0, 10 ** 6))
 def test_seg_last_scan_matches_serial(n, n_segs, seed):
     rng = np.random.default_rng(seed)
