@@ -23,7 +23,18 @@ def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
     return ts[len(ts) // 2]
 
 
+def env_stamp() -> Dict:
+    """Where this measurement ran: numbers from a CPU laptop and a TPU pod
+    slice must never be compared as if same-host, so every saved payload
+    carries the jax version, platform, and device count it was taken on."""
+    import jax
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count()}
+
+
 def save(name: str, payload: Dict) -> str:
+    payload = {**payload, "env": env_stamp()}
     os.makedirs(RESULTS, exist_ok=True)
     fn = os.path.join(RESULTS, f"{name}.json")
     with open(fn, "w") as f:

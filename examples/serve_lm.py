@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.models import build_model
-from repro.serving.engine import Request, ServeEngine
+from repro.models.lm_engine import Request, ServeEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="gemma2-2b")

@@ -6,10 +6,16 @@ merge — part of the fidelity model, noted in DESIGN.md §1).
 
 Four decay instances per atom (lambda = 10, 1, 1/10, 1/60 — windows 100ms /
 1s / 10s / 60s) as in §4.
+
+Multi-tenant serving stores N independent flow tables as ONE stacked pytree
+with a leading tenant axis (:class:`StatePool`, DESIGN.md §10): N tenants
+cost one device allocation per leaf, tenant slots are allocated/freed/reset
+by index, and the tenant-batched fused step (serving/fused.py) gathers and
+scatters slots inside one donated jit so tenant states never mix.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +72,119 @@ def init_state(n_slots: int) -> Dict:
 def state_slots(state: Dict) -> int:
     """Static slot count, derived from table shapes (jit-safe)."""
     return state["uni"]["w"].shape[1]
+
+
+def init_state_stacked(n_tenants: int, n_slots: int) -> Dict:
+    """N fresh flow-table states as ONE stacked pytree (leading tenant
+    axis on every leaf) — the single-allocation layout :class:`StatePool`
+    manages and the tenant-batched fused step vmaps over."""
+    one = init_state(n_slots)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_tenants,) + x.shape)
+        # broadcast_to aliases one buffer across tenants; materialise so
+        # per-tenant scatter updates (pool.at[tid].set) stay independent
+        .copy(), one)
+
+
+class StatePool:
+    """Bounded pool of per-tenant flow-table states, stacked on device.
+
+    The pool owns ``n_tenants`` tenant slots stored as one stacked pytree
+    (``init_state_stacked``): each leaf carries a leading tenant axis, so
+    the whole pool is a single device allocation per table, not N — and
+    the tenant-batched fused serving step (serving/fused.py) can gather
+    any subset of tenant states, run them through one donated jit, and
+    scatter them back without the states ever mixing.
+
+    Lifecycle: ``alloc()`` claims a free slot (its state is freshly
+    reset), ``free(tid)`` releases it, ``reset(tid)`` zeroes a live
+    tenant's tables in place (a new capture on the same slot).  The
+    stacked pytree handle lives at ``pool.stacked``; callers that pass it
+    through a donated step must write the returned handle back (the
+    engine does — DESIGN.md §8 donation contract applies unchanged).
+    """
+
+    def __init__(self, n_tenants: int, n_slots: int):
+        if n_tenants < 1:
+            raise ValueError(f"need at least one tenant slot, got {n_tenants}")
+        self.n_tenants = int(n_tenants)
+        self.n_slots = int(n_slots)
+        self.stacked = init_state_stacked(n_tenants, n_slots)
+        self._live: List[bool] = [False] * n_tenants
+        # one fresh single-tenant state kept as the reset template so
+        # reset() never rebuilds it (host->device) per call
+        self._fresh = init_state(n_slots)
+        # pristine[t] <=> slot t is known to hold a fresh state, letting
+        # alloc() skip the full-pool copy a reset costs; anything that
+        # writes a slot outside reset() must clear the flag (write() and
+        # the engine's dispatch scatter do — mark_dirty)
+        self._pristine: List[bool] = [True] * n_tenants
+
+    # ---- slot lifecycle ----
+    @property
+    def live(self) -> Tuple[int, ...]:
+        """Currently allocated tenant ids, ascending."""
+        return tuple(t for t, on in enumerate(self._live) if on)
+
+    @property
+    def free_slots(self) -> int:
+        return self.n_tenants - len(self.live)
+
+    def alloc(self) -> int:
+        """Claim the lowest free tenant slot (freshly reset); raises
+        ``RuntimeError`` when the pool is exhausted — the caller decides
+        whether that means shed, queue, or grow a new pool."""
+        for t, on in enumerate(self._live):
+            if not on:
+                self._live[t] = True
+                if not self._pristine[t]:
+                    self.reset(t)
+                return t
+        raise RuntimeError(
+            f"StatePool exhausted: all {self.n_tenants} tenant slots live")
+
+    def free(self, tid: int) -> None:
+        """Release a tenant slot.  The actual table reset is deferred to
+        the next ``alloc`` of the slot (pristine tracking), so detach is
+        O(1) — a later alloc still always starts clean."""
+        self._check(tid)
+        self._live[tid] = False
+
+    def reset(self, tid: int) -> None:
+        """Zero tenant ``tid``'s flow tables in place (fresh capture)."""
+        if not 0 <= tid < self.n_tenants:
+            raise IndexError(f"tenant {tid} out of range 0..{self.n_tenants - 1}")
+        self.stacked = jax.tree_util.tree_map(
+            lambda p, f: p.at[tid].set(f), self.stacked, self._fresh)
+        self._pristine[tid] = True
+
+    def mark_dirty(self, tids) -> None:
+        """Record that ``tids``' slots no longer hold fresh state.  Callers
+        that scatter into ``pool.stacked`` directly (the engine's donated
+        dispatch does) must call this so a freed slot's next alloc knows to
+        reset it."""
+        for t in tids:
+            self._pristine[int(t)] = False
+
+    def _check(self, tid: int) -> None:
+        if not 0 <= tid < self.n_tenants:
+            raise IndexError(f"tenant {tid} out of range 0..{self.n_tenants - 1}")
+        if not self._live[tid]:
+            raise KeyError(f"tenant {tid} is not allocated")
+
+    # ---- state access ----
+    def read(self, tid: int) -> Dict:
+        """A standalone COPY of tenant ``tid``'s state (safe to keep
+        across later pool updates/donations)."""
+        self._check(tid)
+        return jax.tree_util.tree_map(lambda x: jnp.copy(x[tid]), self.stacked)
+
+    def write(self, tid: int, state: Dict) -> None:
+        """Install a standalone single-tenant state into slot ``tid``."""
+        self._check(tid)
+        self.stacked = jax.tree_util.tree_map(
+            lambda p, s: p.at[tid].set(s), self.stacked, state)
+        self._pristine[tid] = False
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,123 @@
+"""LM serving engine: prefill + decode over a fixed-slot batch
+(continuous-batching-lite) — seed-era LM scaffolding, kept with the model
+stack it serves.
+
+``serve_step`` — the function the decode_* dry-run cells lower — is one new
+token for every slot against the KV cache.  The engine wraps it with a
+request queue: free slots are refilled by prefilling the incoming prompt and
+splicing its KV into the batch cache at the slot index.
+
+This module used to live at ``repro.serving.engine``; it moved here so the
+``repro.serving`` package (the Peregrine detection plane) no longer drags
+the LM model registry in at import time — ``serving/engine.py`` now hosts
+the multi-tenant ``DetectionEngine`` (DESIGN.md §10), and an import-graph
+test (tests/test_engine.py) pins ``repro.serving``'s allowed dependencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig  # noqa: F401  (public API surface)
+from repro.models.registry import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray          # (S,) int32
+    max_new: int = 32
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, batch_slots: int, max_seq: int,
+                 cache_dtype=jnp.bfloat16, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.cache = model.init_cache(batch_slots, max_seq, cache_dtype)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.remaining = [0] * batch_slots
+        self.outputs: Dict[int, List[int]] = {}
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self._decode = jax.jit(model.decode_step)
+
+    def submit(self, req: Request) -> None:
+        self.queue.put(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.active[slot] is None and not self.queue.empty():
+                req = self.queue.get()
+                # prefill the prompt for this slot alone, splice KV in
+                logits, _, cache1 = self.model.forward(
+                    self.params, {"tokens": req.prompt[None]},
+                    build_cache=True, max_seq=self.max_seq)
+                self.cache = _splice_cache(self.cache, cache1, slot)
+                tok = int(jnp.argmax(logits[0, -1]))
+                self.tokens = self.tokens.at[slot, 0].set(tok)
+                self.active[slot] = req
+                self.remaining[slot] = req.max_new - 1
+                self.outputs[req.rid] = [tok]
+
+    def step(self) -> int:
+        """One engine tick: admit new requests, one decode step for all."""
+        self._admit()
+        if not any(self.active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.tokens, self.cache)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        self.tokens = nxt[:, None]
+        live = 0
+        for slot in range(self.B):
+            req = self.active[slot]
+            if req is None:
+                continue
+            self.outputs[req.rid].append(int(nxt[slot]))
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0:
+                self.active[slot] = None
+            else:
+                live += 1
+        return live
+
+    def run(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
+        for _ in range(max_ticks):
+            self._admit()
+            if not any(self.active) and self.queue.empty():
+                break
+            self.step()
+        return self.outputs
+
+
+def _splice_cache(batch_cache, one_cache, slot: int):
+    """Insert a single-request cache (batch 1) into slot ``slot``.
+
+    Caveat: per-slot decode positions differ in a real continuous-batching
+    server; this lite engine restarts all slots at the spliced request's
+    ``pos`` only when the batch is empty, otherwise uses per-slot masking via
+    the max pos (sufficient for the bundled examples/tests).
+    """
+    def leaf(b, o):
+        if o is None:
+            return b
+        if b.ndim == 0:                 # pos scalar: furthest position wins
+            return jnp.maximum(b, o.astype(b.dtype))
+        if b.shape == o.shape:
+            return o.astype(b.dtype)
+        # leading layer axis, then batch axis
+        if b.ndim >= 2 and o.shape[0] == b.shape[0] and o.shape[1] == 1:
+            return jax.lax.dynamic_update_slice_in_dim(b, o.astype(b.dtype),
+                                                       slot, axis=1)
+        if o.shape[0] == 1:             # xlstm states: batch leading
+            return jax.lax.dynamic_update_slice_in_dim(b, o.astype(b.dtype),
+                                                       slot, axis=0)
+        return b
+
+    return jax.tree_util.tree_map(leaf, batch_cache, one_cache)

@@ -1,2 +1,10 @@
-from repro.serving.engine import ServeEngine  # noqa: F401
+"""Peregrine serving plane: the single-stream ``DetectionService`` and the
+multi-tenant ``DetectionEngine`` (DESIGN.md §10).
+
+This package must stay importable without the LM model stack: an
+import-graph test (tests/test_engine.py) pins its allowed dependencies to
+the detection-plane packages (core/data/detection/traffic/distributed).
+The seed's LM serving engine lives at ``repro.models.lm_engine``.
+"""
 from repro.serving.detect_service import DetectionService  # noqa: F401
+from repro.serving.engine import DetectionEngine  # noqa: F401

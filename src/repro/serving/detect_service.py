@@ -31,6 +31,12 @@ so the host never serialises on per-chunk transfers.  Donation contract
 (DESIGN.md §8): the state handle passed into a fused step is consumed —
 snapshot with ``jax.tree_util.tree_map(jnp.copy, svc.state)``, never by
 aliasing the tree.
+
+The per-chunk step itself is a SHARED core (``serving/fused._make_core``):
+this service jits it one-stream (``make_fused_step``); the multi-tenant
+``DetectionEngine`` (serving/engine.py, DESIGN.md §10) vmaps the same core
+over a tenant axis — which is why one tenant through the engine reproduces
+``process_stream`` bit for bit.
 """
 from __future__ import annotations
 

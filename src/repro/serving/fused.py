@@ -31,6 +31,13 @@ This module compiles the whole per-chunk pipeline as one donated jit:
 Works with any registered FC backend (exact mode) × any MD backend; the
 parity suite (tests/test_fused.py) holds serial-semantics FC backends to
 bit-identical staged-vs-fused outputs.
+
+The same per-chunk core serves two deployment shapes (DESIGN.md §10): the
+single-stream ``DetectionService`` jits it directly (``make_fused_step``),
+and the multi-tenant ``DetectionEngine`` vmaps it over a tenant axis
+(``make_tenant_step``) — T tenants' chunks gathered from a stacked state
+pool, advanced in ONE donated jit, and scattered back, tenant ids carried
+with every lane so states and epoch counters never mix.
 """
 from __future__ import annotations
 
@@ -64,10 +71,13 @@ def _placement_token():
     return flow_shards_binding(), ambient_mesh()
 
 
-@functools.lru_cache(maxsize=None)
-def _cached_step(backend: str, mode: str, backend_kw: Tuple,
-                 md_backend: str, md_kw: Tuple, epoch: int,
-                 placement: Tuple = (None, None)) -> Callable:
+def _make_core(backend: str, mode: str, backend_kw: Tuple,
+               md_backend: str, md_kw: Tuple, epoch: int) -> Callable:
+    """The SHARED per-chunk step: FC → on-device epoch gather → KitNET →
+    threshold, state carried through.  Pure and traceable — the
+    single-stream service jits it donated (``make_fused_step``) and the
+    multi-tenant engine vmaps it over a tenant axis (``make_tenant_step``);
+    both deployment shapes run the identical computation."""
     fc_kw = dict(backend_kw)
     score = md_score_fn(md_backend, **dict(md_kw))
 
@@ -82,6 +92,34 @@ def _cached_step(backend: str, mode: str, backend_kw: Tuple,
                                                **fc_kw)
         scores = score(net, recs)
         return state, idx, scores, scores > threshold, count
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_step(backend: str, mode: str, backend_kw: Tuple,
+                 md_backend: str, md_kw: Tuple, epoch: int,
+                 placement: Tuple = (None, None)) -> Callable:
+    step = _make_core(backend, mode, backend_kw, md_backend, md_kw, epoch)
+    return jax.jit(step, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_tenant_step(backend: str, mode: str, backend_kw: Tuple,
+                        md_backend: str, md_kw: Tuple, epoch: int,
+                        placement: Tuple = (None, None)) -> Callable:
+    core = _make_core(backend, mode, backend_kw, md_backend, md_kw, epoch)
+    # net and threshold are shared across tenants (one fitted detector,
+    # many streams); state / epoch residue / packets carry the tenant axis
+    vcore = jax.vmap(core, in_axes=(0, None, None, 0, 0))
+
+    def step(pool, tenant_ids, net, threshold, base_mods, pkts):
+        sub = jax.tree_util.tree_map(lambda x: x[tenant_ids], pool)
+        sub, idx, scores, alarms, counts = vcore(sub, net, threshold,
+                                                 base_mods, pkts)
+        pool = jax.tree_util.tree_map(
+            lambda p, s: p.at[tenant_ids].set(s), pool, sub)
+        return pool, idx, scores, alarms, counts
 
     return jax.jit(step, donate_argnums=(0,))
 
@@ -109,3 +147,33 @@ def make_fused_step(backend: str = "scan", mode: str = "exact",
                         _freeze(backend_kw or {}), md_backend,
                         _freeze(md_kw or {}), epoch,
                         placement=_placement_token())
+
+
+def make_tenant_step(backend: str = "scan", mode: str = "exact",
+                     backend_kw: Dict = None, md_backend: str = "einsum",
+                     md_kw: Dict = None, epoch: int = 1024) -> Callable:
+    """Build (or fetch from cache) the TENANT-BATCHED fused step.
+
+    Returns ``step(pool, tenant_ids, net, threshold, base_mods, pkts)`` →
+    ``(new_pool, idx, scores, alarms, counts)``: the per-chunk core of
+    :func:`make_fused_step` vmapped over a leading tenant axis.  ``pool``
+    is a stacked state pytree (``core.state.init_state_stacked`` /
+    ``StatePool.stacked``), ``tenant_ids`` a ``(T,)`` int32 vector of pool
+    slots (traced — changing WHICH tenants ride a batch never recompiles;
+    changing how MANY does), ``base_mods`` the ``(T,)`` per-tenant epoch
+    residues, and ``pkts`` packet arrays stacked to ``(T, chunk)``.  Tenant
+    states are gathered from the pool, advanced independently (per-lane
+    results are bitwise those of the single-tenant step on this host —
+    tests/test_engine.py pins it), and scattered back inside the same jit,
+    so states and epoch counters cannot mix.  ``net``/``threshold`` are
+    shared: one fitted detector serving many streams.
+
+    **Donation contract (DESIGN.md §8, unchanged):** ``pool`` is donated —
+    continue from the returned pool only; ``tenant_ids`` must not repeat a
+    tenant within one call (its state would be gathered once and scattered
+    last-write-wins).
+    """
+    return _cached_tenant_step(resolve_backend(backend), mode,
+                               _freeze(backend_kw or {}), md_backend,
+                               _freeze(md_kw or {}), epoch,
+                               placement=_placement_token())

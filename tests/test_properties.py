@@ -12,7 +12,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import arith
 from repro.core.parallel import seg_last_scan, seg_linear_scan
-from repro.core.records import epoch_indices
+from repro.core.records import epoch_gather, epoch_indices
 from repro.detection.metrics import auc
 
 SETT = dict(max_examples=30, deadline=None)
@@ -157,6 +157,29 @@ def test_epoch_indices_invariants(n, epoch, offset):
     a = list(epoch_indices(half, epoch, offset))
     b = [i + half for i in epoch_indices(n - half, epoch, offset + half)]
     assert list(idx) == a + b
+
+
+@settings(**SETT)
+@given(st.integers(1, 400), st.integers(1, 64),
+       st.one_of(st.integers(0, 10 ** 4),
+                 st.integers(2 ** 31 - 100, 2 ** 31 + 100),
+                 st.integers(2 ** 40, 2 ** 40 + 10 ** 4),
+                 st.integers(2 ** 62, 2 ** 62 + 10 ** 4)))
+def test_epoch_gather_exact_past_int31_offsets(n, epoch, offset):
+    """The fused path's on-device ``epoch_gather`` takes only
+    ``offset % epoch`` (an int32 residue), so it must reproduce the host
+    ``epoch_indices`` EXACTLY for int64 stream positions far past 2**31
+    packets — the terabit regime where a raw int32 offset would wrap."""
+    want = epoch_indices(n, epoch, offset)
+    idx, count = epoch_gather(n, epoch, jnp.int32(offset % epoch))
+    idx, count = np.asarray(idx), int(count)
+    assert count == len(want)
+    np.testing.assert_array_equal(idx[:count], want)
+    # padding past count is the documented zero fill
+    assert not idx[count:].any()
+    # global record positions reconstructed host-side stay exact in int64
+    glob = idx[:count].astype(np.int64) + offset
+    assert all((g + 1) % epoch == 0 for g in glob)
 
 
 @settings(**SETT)

@@ -1,11 +1,13 @@
-"""Serving engine + detection service tests."""
+"""LM serving-engine tests (``repro.models.lm_engine`` — the seed's LM
+scaffolding, moved out of ``repro.serving``, which now hosts the Peregrine
+detection engine; see tests/test_engine.py for that)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.models import build_model
-from repro.serving.engine import Request, ServeEngine
+from repro.models.lm_engine import Request, ServeEngine
 
 KEY = jax.random.PRNGKey(0)
 
