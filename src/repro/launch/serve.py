@@ -45,7 +45,7 @@ def serve_detect(args):
 
 
 def serve_lm(args):
-    from repro.serving.engine import Request, ServeEngine
+    from repro.models.lm_engine import Request, ServeEngine
 
     cfg = reduce_cfg(get_arch(args.arch)) if args.reduced else get_arch(args.arch)
     model = build_model(cfg)

@@ -336,6 +336,8 @@ class DetectionEngine:
         for size, tids in sorted(tails.items()):
             for i in range(0, len(tids), self.max_batch):
                 self._dispatch(tids[i:i + self.max_batch], size)
+                while len(self._inflight) > 1:   # keep ONE batch in flight
+                    self._drain_one()
         self._drain_all()
 
     # ------------------------------------------------------------------
@@ -347,7 +349,7 @@ class DetectionEngine:
         returns."""
         gi, sc, al = self._results[tid]
         if not gi:
-            return (np.zeros((0,), np.int64), np.zeros((0,)),
+            return (np.zeros((0,), np.int64), np.zeros((0,), np.float32),
                     np.zeros((0,), bool))
         return np.concatenate(gi), np.concatenate(sc), np.concatenate(al)
 
