@@ -1,7 +1,25 @@
-"""§5.4 ablation (attacks 5-12 discussion): does the switch's approximate
-arithmetic hurt detection?  The paper conjectures it can even act as a
-regularizer.  We run identical traces through exact vs switch FC and compare
-AUC per attack.
+"""§5.4 ablation (attacks 5-12 discussion) + the state-backend frontier.
+
+Two approximation axes, one benchmark:
+
+* ``per_attack`` — does the switch's approximate ARITHMETIC hurt
+  detection?  Identical traces through exact vs switch FC, AUC per attack
+  (the paper conjectures approximation can even act as a regularizer).
+
+* ``state_frontier`` — does the Count-Min SKETCH flow table hurt
+  detection, and how fast does accuracy decay with memory?  The same
+  traces through ``state_backend="sketch"`` at a ladder of memory budgets
+  (total counters per stat table = rows x width), against the dense-exact
+  AUC at the top of the ladder.  This is the accuracy-vs-memory frontier a
+  switch operator trades against SRAM: dense spends one slot per flow slot
+  index, the sketch packs the same stat tables into R hashed rows with
+  conservative update (DESIGN.md §11).
+
+``--assert-auc-floor F`` turns the run into a CI gate: exit nonzero unless
+the dense-exact AUC AND the largest-budget sketch AUC clear F on every
+attack measured — catching both detector regressions and sketch-update
+bugs (a broken conservative update tanks AUC long before it breaks shape
+checks).
 """
 from __future__ import annotations
 
@@ -13,16 +31,28 @@ from benchmarks.common import save
 from repro.detection.sweep import sweep_attack
 from repro.traffic import ATTACKS, synth_trace
 
+# memory ladder: (label, n_slots a.k.a. sketch width) at fixed rows=2 —
+# totals are 1x / ~1/4x / ~1/16x of the dense 8192-slot table
+FULL_BUDGETS = ((4096, 2), (1024, 2), (256, 2))
+QUICK_BUDGETS = ((2048, 2), (512, 2), (128, 2))
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--assert-auc-floor", type=float, default=None,
+                    metavar="F",
+                    help="exit nonzero unless dense-exact AUC and the "
+                         "largest-budget sketch AUC are >= F on every "
+                         "attack")
     args = ap.parse_args()
     attacks = (("syn_dos", "ssdp_flood") if args.quick
                else tuple(ATTACKS))
     n = 6000 if args.quick else 30000
+    budgets = QUICK_BUDGETS if args.quick else FULL_BUDGETS
     rate = 64
     out = {}
+    frontier = {}
     better = 0
     for a in attacks:
         data = synth_trace(a, n_train=n, n_benign_eval=n // 2,
@@ -32,11 +62,37 @@ def main():
         out[a] = {"exact": ex, "switch": sw, "delta": sw - ex}
         better += sw >= ex
         print(f"{a:18s} exact={ex:.3f} switch={sw:.3f} delta={sw - ex:+.3f}")
+        # sketch frontier: exact arithmetic, compressed flow tables
+        frontier[a] = {"dense": ex}
+        for width, rows in budgets:
+            sk = sweep_attack(data, [rate], mode="exact", n_slots=width,
+                              state_backend="sketch",
+                              state_kw={"rows": rows},
+                              )["peregrine"][rate]["auc"]
+            frontier[a][f"sketch_r{rows}_w{width}"] = sk
+            print(f"{a:18s} sketch rows={rows} width={width:5d} "
+                  f"({rows * width:5d} ctrs) auc={sk:.3f} "
+                  f"delta={sk - ex:+.3f}")
     print(f"switch >= exact on {better}/{len(attacks)} attacks "
           f"(paper: approximations sometimes improve AUC)")
     save("approx_ablation", {"rate": rate, "per_attack": out,
                              "switch_geq_exact": better,
-                             "n_attacks": len(attacks)})
+                             "n_attacks": len(attacks),
+                             "budgets_rows_x_width": [
+                                 [r, w] for w, r in budgets],
+                             "state_frontier": frontier})
+    if args.assert_auc_floor is not None:
+        floor = args.assert_auc_floor
+        width, rows = budgets[0]
+        top = f"sketch_r{rows}_w{width}"
+        bad = [f"{a}: {k}={frontier[a][k]:.3f}"
+               for a in attacks for k in ("dense", top)
+               if frontier[a][k] < floor]
+        if bad:
+            raise SystemExit(f"AUC floor {floor} violated: "
+                             + "; ".join(bad))
+        print(f"AUC gate: dense and {top} >= {floor} on all "
+              f"{len(attacks)} attacks")
 
 
 if __name__ == "__main__":

@@ -20,14 +20,17 @@ FULL_RATES = (1, 64, 256, 1024)
 QUICK_RATES = (1, 256)
 
 
-def run(attacks, rates, n_train, n_eval, mode="switch", seed=0):
+def run(attacks, rates, n_train, n_eval, mode="switch", seed=0,
+        state_backend="dense", state_kw=None):
     table = {}
     for attack in attacks:
         t0 = time.time()
         data = synth_trace(attack, n_train=n_train,
                            n_benign_eval=n_eval // 2,
                            n_attack=n_eval // 2, seed=seed)
-        table[attack] = sweep_attack(data, rates, mode=mode, seed=seed)
+        table[attack] = sweep_attack(data, rates, mode=mode, seed=seed,
+                                     state_backend=state_backend,
+                                     state_kw=state_kw)
         p = {r: round(v["auc"], 3) for r, v in table[attack]["peregrine"].items()}
         k = {r: round(v["auc"], 3) for r, v in table[attack]["kitsune"].items()}
         print(f"{attack:18s} peregrine={p} kitsune={k} "
@@ -55,22 +58,56 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--mode", default="switch", choices=("switch", "exact"))
+    ap.add_argument("--state-backend", default="dense",
+                    choices=("dense", "sketch"),
+                    help="flow-table layout for the Peregrine system "
+                         "(sketch forces exact arithmetic)")
+    ap.add_argument("--sketch-rows", type=int, default=2,
+                    help="Count-Min rows when --state-backend sketch")
+    ap.add_argument("--assert-auc-floor", type=float, default=None,
+                    metavar="F",
+                    help="exit nonzero unless every Peregrine AUC across "
+                         "attacks and SAMPLED rates (rate > 1) is >= F "
+                         "(rate 1 is excluded, matching the paper's "
+                         "headline: unsampled training is the known-"
+                         "degenerate corner)")
     args = ap.parse_args()
+    mode = args.mode
+    state_kw = None
+    if args.state_backend == "sketch":
+        mode = "exact"      # the sketch implements exact arithmetic only
+        state_kw = {"rows": args.sketch_rows}
     if args.quick:
         attacks = ("syn_dos", "ssdp_flood", "mirai")
         rates = QUICK_RATES
         table = run(attacks, rates, n_train=8000, n_eval=12000,
-                    mode=args.mode)
+                    mode=mode, state_backend=args.state_backend,
+                    state_kw=state_kw)
     else:
         attacks = tuple(ATTACKS)
         rates = FULL_RATES
         table = run(attacks, rates, n_train=60000, n_eval=60000,
-                    mode=args.mode)
+                    mode=mode, state_backend=args.state_backend,
+                    state_kw=state_kw)
     head = summarize(table, rates)
     print("headline:", head)
-    save("detection_auc" + ("_quick" if args.quick else ""),
-         {"rates": rates, "mode": args.mode, "table": table,
-          "headline": head})
+    suffix = ("_" + args.state_backend if args.state_backend != "dense"
+              else "")
+    save("detection_auc" + suffix + ("_quick" if args.quick else ""),
+         {"rates": rates, "mode": mode,
+          "state_backend": args.state_backend, "state_kw": state_kw,
+          "table": table, "headline": head})
+    if args.assert_auc_floor is not None:
+        floor = args.assert_auc_floor
+        gated = [r for r in rates if r > 1]
+        bad = [f"{a}@rate{r}: {table[a]['peregrine'][r]['auc']:.3f}"
+               for a in table for r in gated
+               if table[a]["peregrine"][r]["auc"] < floor]
+        if bad:
+            raise SystemExit(f"Peregrine AUC floor {floor} violated: "
+                             + "; ".join(bad))
+        print(f"AUC gate: peregrine >= {floor} on all "
+              f"{len(table)} attacks x {len(gated)} sampled rates")
 
 
 if __name__ == "__main__":

@@ -112,18 +112,21 @@ import numpy as np
 
 # the serial-semantics backends are orders of magnitude slower per packet:
 # measure them on a truncated stream so the benchmark finishes
+# (``sketch`` here is the pure-JAX per-packet reference scan — the Pallas
+# sketch kernel shares pallas's interpret-mode caveat on CPU)
 _BACKEND_PKTS = {"serial": 2000, "sharded": 2000, "scan": None,
-                 "bucketed": None, "pallas": 4096}
+                 "bucketed": None, "pallas": 4096, "sketch": 2000}
 
 DEFAULT_BACKENDS = ("serial,scan,bucketed:4,bucketed:16,pallas,"
-                    "sharded:4,sharded:16")
+                    "sharded:4,sharded:16,sketch:2")
 
 # backends taking a ``:S`` partition-count suffix -> the kwarg it sets
-_SUFFIX_KW = {"sharded": "shards", "bucketed": "buckets"}
+_SUFFIX_KW = {"sharded": "shards", "bucketed": "buckets", "sketch": "rows"}
 
 
 def parse_backend(spec: str) -> Tuple[str, Dict, str]:
-    """``"sharded:16"``/``"bucketed:4"`` -> (name, kwargs, result label)."""
+    """``"sharded:16"``/``"bucketed:4"``/``"sketch:2"`` ->
+    (name, kwargs, result label)."""
     if ":" in spec:
         name, arg = spec.split(":", 1)
         name = resolve_backend(name)
@@ -165,16 +168,23 @@ def _warm_stream(spec: str, data: Dict, n_pkts: int, chunk: int,
     pk = to_jnp(tr)
     chunks = [{k: v[i:i + c] for k, v in pk.items()}
               for i in range(0, n, c)]
+    # a "sketch:R" spec is a STATE backend: build the Count-Min state and
+    # let compute_features dispatch structurally (the kwargs configure the
+    # state, not the FC call)
+    if name == "sketch":
+        state0, fc_kw = init_state(n_slots, state_backend="sketch", **kw), {}
+    else:
+        state0, fc_kw = init_state(n_slots), kw
 
     def stream(state):
         f = None
         for ch in chunks:
             state, f = compute_features(state, ch, backend=name,
-                                        mode="exact", **kw)
+                                        mode="exact", **fc_kw)
         jax.block_until_ready(f)
         return state
 
-    warm = stream(init_state(n_slots))      # compile + steady-state tables
+    warm = stream(state0)      # compile + steady-state tables
     return (lambda: stream(warm)), n, name, label
 
 
@@ -273,7 +283,7 @@ def engine_rates(n_tenants: int = 4, n_pkts: int = 8000, epoch: int = 256,
     per-chunk latency — the two numbers a switch operator sizes against."""
     svc, ev, n_eval = _fitted_service(n_pkts, epoch, chunk, n_slots)
     _engine_run(svc, ev, n_tenants, chunk)          # compile + warm-up
-    best_t, worst_p99 = None, 0.0
+    best_t, worst_p99, collisions = None, 0.0, 0
     for _ in range(reps):
         t0 = time.perf_counter()
         eng = _engine_run(svc, ev, n_tenants, chunk)
@@ -282,8 +292,14 @@ def engine_rates(n_tenants: int = 4, n_pkts: int = 8000, epoch: int = 256,
             best_t = dt
             st = eng.stats()["tenants"]
             worst_p99 = max(v["p99_ms"] for v in st.values())
+            # dense-state slot pressure: distinct flows that shared a table
+            # slot with another flow, summed over tenants (0 for sketch
+            # states, which have no per-flow slots to collide)
+            collisions = sum(v.get("slot_collisions", 0)
+                             for v in st.values())
     return {f"engine_tenants{n_tenants}_agg_pps": n_tenants * n_eval / best_t,
-            f"engine_tenants{n_tenants}_worst_tenant_p99": worst_p99}
+            f"engine_tenants{n_tenants}_worst_tenant_p99": worst_p99,
+            f"engine_tenants{n_tenants}_slot_collisions": collisions}
 
 
 def interleaved_engine_ratio(n_tenants: int = 4, n_pkts: int = 8000,
@@ -508,7 +524,7 @@ def main():
         out.update(pipeline_rates(backends, md_backends=mds,
                                   n_pkts=min(n, 8000), chunk=args.chunk))
     for k, v in out.items():
-        if isinstance(v, float):
+        if isinstance(v, (int, float)):
             print(f"{k:40s} {v:12.0f}")
         elif isinstance(v, dict) and k.endswith("_latency"):
             print(f"{k:40s} p50 {v['p50_ms']:8.2f} ms   "

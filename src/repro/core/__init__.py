@@ -3,7 +3,9 @@ per-epoch feature-record sampling feeding ML detection (the paper's primary
 contribution, adapted to TPU — see DESIGN.md §2)."""
 from repro.core.state import (  # noqa: F401
     init_state, state_slots, packet_slots, N_FEATURES, FEATURE_NAMES,
-    LAMBDAS, N_DECAY,
+    LAMBDAS, N_DECAY, StatePool, available_state_backends,
+    init_state_stacked, register_state_backend, slot_collisions,
+    state_backend_of, state_config, state_spec_of,
 )
 from repro.core.pipeline import process_serial  # noqa: F401
 from repro.core.parallel import process_parallel  # noqa: F401

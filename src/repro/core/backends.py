@@ -32,12 +32,23 @@ Backends (all emit the identical (n, N_FEATURES) layout):
 
 ``register_backend`` remains the extension point for further flow-table
 backends (e.g. multi-host partitions).
+
+State-backend dispatch: the five FC backends above all implement the
+DENSE state contract (direct-indexed ``(n_slots, ...)`` tables).  A state
+built with ``init_state(..., state_backend="sketch")`` carries its own
+compute path (core/sketch.py); ``compute_features`` identifies it
+structurally (``state_spec_of``) and routes there, with the ``backend=``
+name demoted to an implementation hint (``pallas`` → the sketch Pallas
+kernel, anything else → the pure-JAX reference).  ``"sketch"`` is also a
+registered FC name so benchmark/CLI specs can spell it directly.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Tuple
 
 import jax
+
+from repro.core.state import state_spec_of
 
 # name -> (fn(state, pkts, mode, **kw) -> (state, feats), supported modes)
 _REGISTRY: Dict[str, Tuple[Callable, Tuple[str, ...]]] = {}
@@ -104,6 +115,16 @@ def _bucketed(state, pkts, mode: str = "exact", buckets: int = 4, **_kw):
     return process_bucketed(state, pkts, buckets=buckets, mode=mode)
 
 
+@register_backend("sketch")
+def _sketch(state, pkts, mode: str = "exact", **kw):
+    # only reachable with a non-sketch state (sketch states dispatch via
+    # state_spec_of before the registry lookup)
+    raise ValueError(
+        "backend='sketch' needs sketch-backed state; build it with "
+        "init_state(n_slots, state_backend='sketch', rows=R) — the state "
+        f"passed here is {state_spec_of(state).name!r}")
+
+
 def compute_features(state: Dict, pkts: Dict[str, jax.Array],
                      backend: str = "scan", mode: str = "exact",
                      **kw) -> Tuple[Dict, jax.Array]:
@@ -120,6 +141,11 @@ def compute_features(state: Dict, pkts: Dict[str, jax.Array],
     point is needed (DESIGN.md §8).
     """
     name = resolve_backend(backend)
+    spec = state_spec_of(state)
+    if spec.compute is not None:
+        # non-dense state carries its own compute path; the backend name
+        # becomes an implementation hint (e.g. "pallas" -> sketch kernel)
+        return spec.compute(state, pkts, mode=mode, fc_backend=name, **kw)
     fn, modes = _REGISTRY[name]
     if mode not in modes:
         raise ValueError(
@@ -164,6 +190,11 @@ def compute_features_sampled(state: Dict, pkts: Dict[str, jax.Array],
     fused serving step (serving/fused.py) inlines it into one jit.
     """
     name = resolve_backend(backend)
+    spec = state_spec_of(state)
+    if spec.compute is not None:
+        new_state, feats = spec.compute(state, pkts, mode=mode,
+                                        fc_backend=name, **kw)
+        return new_state, feats[sample_idx]
     fn = _SAMPLED.get(name)
     if fn is not None and mode == "exact":
         return fn(state, pkts, sample_idx, **kw)

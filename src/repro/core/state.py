@@ -7,6 +7,15 @@ merge — part of the fidelity model, noted in DESIGN.md §1).
 Four decay instances per atom (lambda = 10, 1, 1/10, 1/60 — windows 100ms /
 1s / 10s / 60s) as in §4.
 
+State layout is PLUGGABLE (DESIGN.md §11): ``init_state(n,
+state_backend=...)`` selects a registered :class:`StateBackend` — ``dense``
+(the direct-indexed slot arrays below, the default) or ``sketch``
+(Count-Min multi-row hashed tables with conservative update,
+``core/sketch.py``).  Everything downstream — ``compute_features``, the
+fused serving step, :class:`StatePool` — identifies the layout structurally
+(``state_backend_of``) and routes accordingly, so a state dict remains the
+only handle that ever crosses an API boundary.
+
 Multi-tenant serving stores N independent flow tables as ONE stacked pytree
 with a leading tenant axis (:class:`StatePool`, DESIGN.md §10): N tenants
 cost one device allocation per leaf, tenant slots are allocated/freed/reset
@@ -15,10 +24,11 @@ scatters slots inside one donated jit so tenant states never mix.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 LAMBDAS = (10.0, 1.0, 0.1, 1.0 / 60.0)
 N_DECAY = len(LAMBDAS)
@@ -41,12 +51,101 @@ FEATURE_NAMES = tuple(
 )
 
 
-def init_state(n_slots: int) -> Dict:
-    """Fresh flow tables. Shapes:
+# ---------------------------------------------------------------------------
+# State-backend registry
+# ---------------------------------------------------------------------------
+class StateBackend(NamedTuple):
+    """One pluggable flow-state layout.
 
-    uni tables: (N_UNI, n_slots, N_DECAY) atoms; bi tables carry a direction
-    axis (N_BI, n_slots, 2, N_DECAY) plus channel-level SR state.
+    The implicit dense-state contract — init / static slot count /
+    structural identification / per-batch compute — made explicit, so a
+    second layout (``sketch``) can ride every downstream subsystem
+    (backend dispatch, fused serving, :class:`StatePool`) without those
+    subsystems growing per-layout branches.
     """
+    name: str
+    #: (n_slots, **cfg) -> fresh state pytree
+    init: Callable[..., Dict]
+    #: state -> static slot/width count (jit-safe: reads shapes only)
+    slots: Callable[[Dict], int]
+    #: state -> does this pytree belong to this backend?  Structural only
+    #: (key presence), so it works on tracers and stacked pool pytrees.
+    matches: Callable[[Dict], bool]
+    #: state -> reconstruction kwargs (everything ``init`` needs besides
+    #: ``n_slots``) — how StatePool/engine rebuild fresh states of the
+    #: same shape.  Host-side only (may concretise scalar leaves).
+    config: Callable[[Dict], Dict]
+    #: optional (state, pkts, mode=..., fc_backend=..., **kw) ->
+    #: (state, feats): backends whose update does NOT ride the dense FC
+    #: registry (sketch).  None = dense contract, FC registry dispatches.
+    compute: Optional[Callable] = None
+
+
+_STATE_BACKENDS: Dict[str, StateBackend] = {}
+
+# backends that register themselves on first import
+_LAZY_STATE_MODULES = {"sketch": "repro.core.sketch"}
+
+
+def register_state_backend(backend: StateBackend) -> StateBackend:
+    _STATE_BACKENDS[backend.name] = backend
+    return backend
+
+
+def available_state_backends() -> Tuple[str, ...]:
+    return tuple(sorted(set(_STATE_BACKENDS) | set(_LAZY_STATE_MODULES)))
+
+
+def resolve_state_backend(name: str) -> StateBackend:
+    """The registered :class:`StateBackend` for ``name`` (lazily importing
+    modules that register on import); raises on unknown names."""
+    if name not in _STATE_BACKENDS and name in _LAZY_STATE_MODULES:
+        import importlib
+        importlib.import_module(_LAZY_STATE_MODULES[name])
+    if name not in _STATE_BACKENDS:
+        raise ValueError(f"unknown state backend {name!r}; "
+                         f"available: {available_state_backends()}")
+    return _STATE_BACKENDS[name]
+
+
+def state_spec_of(state: Dict) -> StateBackend:
+    """The :class:`StateBackend` a state pytree belongs to, identified
+    structurally — works on concrete states, tracers, and stacked pools."""
+    for spec in _STATE_BACKENDS.values():
+        if spec.matches(state):
+            return spec
+    for name in _LAZY_STATE_MODULES:
+        spec = resolve_state_backend(name)
+        if spec.matches(state):
+            return spec
+    raise ValueError("state pytree matches no registered state backend "
+                     f"(available: {available_state_backends()})")
+
+
+def state_backend_of(state: Dict) -> str:
+    return state_spec_of(state).name
+
+
+def state_config(state: Dict) -> Dict:
+    """Reconstruction kwargs for ``init_state`` (minus ``n_slots``): pass
+    to build fresh states with the same layout/parameters.  Host-side."""
+    return dict(state_spec_of(state).config(state))
+
+
+def init_state(n_slots: int, state_backend: str = "dense", **state_kw) -> Dict:
+    """Fresh flow tables for the selected state backend.
+
+    ``dense`` (default): direct-indexed slot arrays — uni tables
+    (N_UNI, n_slots, N_DECAY) atoms; bi tables carry a direction axis
+    (N_BI, n_slots, 2, N_DECAY) plus channel-level SR state.
+
+    ``sketch``: Count-Min multi-row hashed tables (core/sketch.py) of
+    width ``n_slots`` — pass ``rows=R`` / ``evict_age=seconds``.
+    """
+    return resolve_state_backend(state_backend).init(n_slots, **state_kw)
+
+
+def _dense_init(n_slots: int) -> Dict:
     z = jnp.zeros
     return {
         "uni": {
@@ -69,16 +168,29 @@ def init_state(n_slots: int) -> Dict:
     }
 
 
+register_state_backend(StateBackend(
+    name="dense",
+    init=_dense_init,
+    slots=lambda s: s["uni"]["w"].shape[1],
+    # rr counters exist only in the dense layout (round-robin switch mode)
+    matches=lambda s: isinstance(s, dict) and "rr" in s.get("uni", {}),
+    config=lambda s: {},
+    compute=None,
+))
+
+
 def state_slots(state: Dict) -> int:
-    """Static slot count, derived from table shapes (jit-safe)."""
-    return state["uni"]["w"].shape[1]
+    """Static slot count (dense) / table width (sketch), derived from
+    table shapes via the state's backend (jit-safe)."""
+    return state_spec_of(state).slots(state)
 
 
-def init_state_stacked(n_tenants: int, n_slots: int) -> Dict:
+def init_state_stacked(n_tenants: int, n_slots: int,
+                       state_backend: str = "dense", **state_kw) -> Dict:
     """N fresh flow-table states as ONE stacked pytree (leading tenant
     axis on every leaf) — the single-allocation layout :class:`StatePool`
     manages and the tenant-batched fused step vmaps over."""
-    one = init_state(n_slots)
+    one = init_state(n_slots, state_backend=state_backend, **state_kw)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (n_tenants,) + x.shape)
         # broadcast_to aliases one buffer across tenants; materialise so
@@ -104,16 +216,22 @@ class StatePool:
     engine does — DESIGN.md §8 donation contract applies unchanged).
     """
 
-    def __init__(self, n_tenants: int, n_slots: int):
+    def __init__(self, n_tenants: int, n_slots: int,
+                 state_backend: str = "dense", **state_kw):
         if n_tenants < 1:
             raise ValueError(f"need at least one tenant slot, got {n_tenants}")
         self.n_tenants = int(n_tenants)
         self.n_slots = int(n_slots)
-        self.stacked = init_state_stacked(n_tenants, n_slots)
+        self.state_backend = resolve_state_backend(state_backend).name
+        self.state_kw = dict(state_kw)
+        self.stacked = init_state_stacked(n_tenants, n_slots,
+                                          state_backend=self.state_backend,
+                                          **self.state_kw)
         self._live: List[bool] = [False] * n_tenants
         # one fresh single-tenant state kept as the reset template so
         # reset() never rebuilds it (host->device) per call
-        self._fresh = init_state(n_slots)
+        self._fresh = init_state(n_slots, state_backend=self.state_backend,
+                                 **self.state_kw)
         # pristine[t] <=> slot t is known to hold a fresh state, letting
         # alloc() skip the full-pool copy a reset costs; anything that
         # writes a slot outside reset() must clear the flag (write() and
@@ -202,6 +320,36 @@ def hash_fields(fields, salt: int) -> jax.Array:
     return h
 
 
+# per-key-type base hash salts; the sketch backend derives its row salts
+# from these (row 0 == the dense salt, so a 1-row sketch of equal width
+# maps flows to exactly the dense slots — the degeneracy tests rely on it)
+KEY_SALTS = {"src_mac_ip": 1, "src_ip": 2, "channel": 3, "socket": 4}
+
+
+def key_fields(pkts) -> Tuple[Dict[str, Tuple], jax.Array]:
+    """Canonicalised per-key-type hash-field tuples + channel dir bit.
+
+    The single definition of WHAT gets hashed per key type; every slot
+    mapping (dense ``packet_slots``, the sketch rows, the collision
+    fingerprints) derives from it, so key canonicalisation can never
+    drift between state backends.
+    """
+    src, dst = pkts["src"], pkts["dst"]
+    sport, dport = pkts["sport"], pkts["dport"]
+    lo_is_src = (src < dst) | ((src == dst) & (sport <= dport))
+    ip_lo = jnp.where(lo_is_src, src, dst)
+    ip_hi = jnp.where(lo_is_src, dst, src)
+    p_lo = jnp.where(lo_is_src, sport, dport)
+    p_hi = jnp.where(lo_is_src, dport, sport)
+    fields = {
+        "src_mac_ip": (src,),
+        "src_ip": (src,),
+        "channel": (ip_lo, ip_hi),
+        "socket": (ip_lo, ip_hi, p_lo, p_hi, pkts["proto"]),
+    }
+    return fields, (~lo_is_src).astype(jnp.int32)
+
+
 def packet_slots(pkts: Dict[str, jax.Array], n_slots: int) -> Dict[str, jax.Array]:
     """Per-packet slot indices + channel direction bit.
 
@@ -212,19 +360,70 @@ def packet_slots(pkts: Dict[str, jax.Array], n_slots: int) -> Dict[str, jax.Arra
     the tie on ports, so the two directions of a swapped-port socket still
     share a slot with opposite ``dir`` bits instead of merging.
     """
-    src, dst = pkts["src"], pkts["dst"]
-    sport, dport = pkts["sport"], pkts["dport"]
-    lo_is_src = (src < dst) | ((src == dst) & (sport <= dport))
-    ip_lo = jnp.where(lo_is_src, src, dst)
-    ip_hi = jnp.where(lo_is_src, dst, src)
-    p_lo = jnp.where(lo_is_src, sport, dport)
-    p_hi = jnp.where(lo_is_src, dport, sport)
+    fields, dirb = key_fields(pkts)
     ns = jnp.uint32(n_slots)
+    out = {k: (hash_fields(f, KEY_SALTS[k]) % ns).astype(jnp.int32)
+           for k, f in fields.items()}
+    out["dir"] = dirb
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense-path slot-collision telemetry (host-side numpy twin of the hash)
+# ---------------------------------------------------------------------------
+# salt for the collision fingerprint: independent of every table salt
+# (KEY_SALTS and the sketch row salts), so two flows sharing a slot almost
+# never share a fingerprint
+_FP_SALT = 0x7F4A7C15
+
+
+def np_hash_fields(fields, salt: int) -> np.ndarray:
+    """Numpy twin of :func:`hash_fields` — bit-identical on uint32 inputs
+    (property-tested), so per-chunk telemetry never touches the device."""
+    h = np.full(np.shape(fields[0]), np.uint32(salt ^ 0x811C9DC5), np.uint32)
+    for f in fields:
+        h = (h ^ np.asarray(f, np.uint32)) * np.uint32(0x9E3779B1)
+        h = h ^ (h >> np.uint32(15))
+    return h
+
+
+def _np_key_fields(pkts) -> Dict[str, Tuple]:
+    src = np.asarray(pkts["src"])
+    dst = np.asarray(pkts["dst"])
+    sport = np.asarray(pkts["sport"])
+    dport = np.asarray(pkts["dport"])
+    lo_is_src = (src < dst) | ((src == dst) & (sport <= dport))
+    ip_lo = np.where(lo_is_src, src, dst)
+    ip_hi = np.where(lo_is_src, dst, src)
+    p_lo = np.where(lo_is_src, sport, dport)
+    p_hi = np.where(lo_is_src, dport, sport)
     return {
-        "src_mac_ip": (hash_fields((src,), 1) % ns).astype(jnp.int32),
-        "src_ip": (hash_fields((src,), 2) % ns).astype(jnp.int32),
-        "channel": (hash_fields((ip_lo, ip_hi), 3) % ns).astype(jnp.int32),
-        "socket": (hash_fields((ip_lo, ip_hi, p_lo, p_hi, pkts["proto"]), 4)
-                   % ns).astype(jnp.int32),
-        "dir": (~lo_is_src).astype(jnp.int32),
+        "src_mac_ip": (src,),
+        "src_ip": (src,),
+        "channel": (ip_lo, ip_hi),
+        "socket": (ip_lo, ip_hi, p_lo, p_hi, np.asarray(pkts["proto"])),
     }
+
+
+def slot_collisions(pkts: Dict[str, np.ndarray],
+                    n_slots: int) -> Dict[str, int]:
+    """Distinct flow keys aliased onto an occupied slot in this chunk.
+
+    Per key type: hash every packet to its dense slot, fingerprint the
+    flow key with an independent salt, and count ``distinct (slot, key)
+    pairs − distinct slots`` — i.e. how many distinct flows merged into a
+    slot some other flow already claims.  0 everywhere ⇔ the chunk was
+    collision-free.  Pure numpy (no device round-trip): cheap enough to
+    run per dispatched chunk in ``DetectionEngine`` telemetry.
+    """
+    out = {}
+    total = 0
+    for name, f in _np_key_fields(pkts).items():
+        slot = np_hash_fields(f, KEY_SALTS[name]) % np.uint32(n_slots)
+        fp = np_hash_fields(f, _FP_SALT)
+        pair = slot.astype(np.uint64) << np.uint64(32) | fp.astype(np.uint64)
+        c = int(np.unique(pair).size - np.unique(slot).size)
+        out[name] = c
+        total += c
+    out["total"] = total
+    return out

@@ -21,8 +21,10 @@ from repro.detection.metrics import auc, f1_at_fpr
 from repro.traffic.generator import to_jnp
 
 
-def _fc(trace, n_slots, mode, state=None, backend=None):
-    st = state if state is not None else init_state(n_slots)
+def _fc(trace, n_slots, mode, state=None, backend=None,
+        state_backend="dense", state_kw=None):
+    st = state if state is not None else init_state(
+        n_slots, state_backend=state_backend, **(state_kw or {}))
     pk = to_jnp(trace)
     if backend is None:
         backend = default_backend(mode)
@@ -33,14 +35,18 @@ def _fc(trace, n_slots, mode, state=None, backend=None):
 def sweep_attack(data: Dict, rates: Iterable[int], n_slots: int = 8192,
                  mode: str = "switch", seed: int = 0,
                  min_train_records: int = 16, backend: str = None,
-                 md_backend: str = None,
-                 md_kw: Dict = None) -> Dict[str, Dict[int, Dict]]:
+                 md_backend: str = None, md_kw: Dict = None,
+                 state_backend: str = "dense",
+                 state_kw: Dict = None) -> Dict[str, Dict[int, Dict]]:
     """Returns {system: {rate: {auc, f1_10, f1_01, n_records, n_attack}}}.
 
     ``backend`` names the Peregrine FC implementation (serial/scan/pallas);
     ``md_backend`` the KitNET scoring implementation (einsum/pallas, with
-    options in ``md_kw``), used for both systems.  The Kitsune baseline
-    always computes exact software features.
+    options in ``md_kw``), used for both systems.  ``state_backend``/
+    ``state_kw`` pick the Peregrine flow-table layout (dense direct-indexed
+    slots vs the Count-Min sketch) — the Kitsune baseline always computes
+    exact software features over dense state, so a sketch sweep measures
+    the accuracy cost of the compressed flow tables alone.
     """
     if md_backend is None:
         md_backend = default_md_backend()
@@ -48,7 +54,8 @@ def sweep_attack(data: Dict, rates: Iterable[int], n_slots: int = 8192,
     out = {"peregrine": {}, "kitsune": {}}
 
     # ---------------- Peregrine: FC over ALL packets, once ----------------
-    st, f_train = _fc(data["train"], n_slots, mode, backend=backend)
+    st, f_train = _fc(data["train"], n_slots, mode, backend=backend,
+                      state_backend=state_backend, state_kw=state_kw)
     _, f_eval = _fc(data["eval"], n_slots, mode, state=st, backend=backend)
     ev_labels = data["eval"]["label"]
     for rate in rates:

@@ -41,7 +41,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.state import (
     BI_STATS, LAMBDAS, N_BI, N_DECAY, N_FEATURES, N_UNI, UNI_STATS,
-    packet_slots,
+    packet_slots, state_slots,
 )
 
 _LAM = tuple(LAMBDAS)
@@ -346,7 +346,7 @@ def feature_update_full(state, pkts, *, chunk: int = 256,
     length}``.  Returns ``(new_state, feats (n, N_FEATURES))`` matching
     ``process_serial(..., mode="exact")`` to float tolerance.
     """
-    n_slots = state["uni"]["w"].shape[1]
+    n_slots = state_slots(state)
     sl = packet_slots(pkts, n_slots)
     ts = pkts["ts"].astype(jnp.float32)
     lens = pkts["length"].astype(jnp.float32)

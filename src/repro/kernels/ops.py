@@ -19,6 +19,7 @@ from repro.kernels.feature_update import (
     feature_update_full as _feat_full,
 )
 from repro.kernels.kitnet_ae import kitnet_ensemble as _kitnet
+from repro.kernels.sketch_update import sketch_update_full as _sketch_full
 
 
 def interpret_default() -> bool:
@@ -45,6 +46,12 @@ def feature_update(table, slots, ts, lens, *, chunk=256, interpret=None):
 def feature_update_full(state, pkts, *, chunk=256, interpret=None):
     """Full 80-feature Peregrine FC (all key types + bi stats) in Pallas."""
     return _feat_full(state, pkts, chunk=chunk, interpret=_resolve(interpret))
+
+
+def sketch_update_full(state, pkts, *, chunk=256, interpret=None):
+    """Count-Min sketch FC (all 80 features, CU + eviction) in Pallas."""
+    return _sketch_full(state, pkts, chunk=chunk,
+                        interpret=_resolve(interpret))
 
 
 def kitnet_ensemble(x_sub, w1, b1, w2, b2, mask, *, bb=128, interpret=None):

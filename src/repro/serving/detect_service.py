@@ -60,7 +60,9 @@ class DetectionService:
                  backend: Optional[str] = None,
                  md_backend: Optional[str] = None,
                  md_kw: Optional[Dict] = None,
-                 fused: Optional[bool] = None, **backend_kw):
+                 fused: Optional[bool] = None,
+                 state_backend: str = "dense",
+                 state_kw: Optional[Dict] = None, **backend_kw):
         self.epoch = epoch
         self.mode = mode
         self.backend = resolve_backend(backend if backend is not None
@@ -75,7 +77,10 @@ class DetectionService:
         # batch pipeline runs (every backend supports it; the switch
         # approximation mode stays on the staged oracle path)
         self.fused = (mode == "exact") if fused is None else bool(fused)
-        self.state = init_state(n_slots)
+        # state_backend picks the flow-table layout (dense slots or the
+        # Count-Min sketch); state_kw e.g. rows=/evict_age= for "sketch"
+        self.state = init_state(n_slots, state_backend=state_backend,
+                                **(state_kw or {}))
         self.net: Optional[KitNet] = None
         # thresholds are kept f32-representable so the fused (device, f32)
         # and staged (numpy) comparisons agree bit-for-bit

@@ -46,7 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import resolve_backend
-from repro.core.state import StatePool, state_slots
+from repro.core.state import (StatePool, slot_collisions, state_backend_of,
+                              state_config, state_slots)
 from repro.detection.md_backends import (default_md_backend,
                                          validate_md_options)
 
@@ -77,6 +78,12 @@ class DetectionEngine:
     alarm_dir / alarm_format:
         When set, every drained alarm is appended to a per-tenant
         structured log ``<alarm_dir>/tenant<id>.{csv|jsonl}``.
+    state_backend / state_kw:
+        Flow-table layout of the tenant pool: ``"dense"`` (default) or
+        ``"sketch"`` (``state_kw={"rows": R, "evict_age": ...}``);
+        ``from_service`` inherits both from the service's state.  Dense
+        pools additionally report per-tenant ``slot_collisions`` — the
+        distinct flow keys that aliased an occupied slot per chunk.
     """
 
     def __init__(self, net, threshold: float, *, epoch: int = 1024,
@@ -85,7 +92,9 @@ class DetectionEngine:
                  backend: Optional[str] = None, backend_kw: Optional[Dict] = None,
                  md_backend: Optional[str] = None, md_kw: Optional[Dict] = None,
                  mode: str = "exact", alarm_dir: Optional[str] = None,
-                 alarm_format: str = "csv"):
+                 alarm_format: str = "csv",
+                 state_backend: str = "dense",
+                 state_kw: Optional[Dict] = None):
         if mode != "exact":
             raise ValueError("DetectionEngine rides the fused exact-mode "
                              f"path; mode {mode!r} is not supported")
@@ -108,7 +117,11 @@ class DetectionEngine:
         self.chunk = int(chunk)
         self.queue_depth = int(queue_depth)
         self.max_batch = int(max_batch if max_batch is not None else n_tenants)
-        self.pool = StatePool(n_tenants, n_slots)
+        self.state_backend = state_backend
+        self.state_kw = dict(state_kw or {})
+        self.n_slots = int(n_slots)
+        self.pool = StatePool(n_tenants, n_slots, state_backend=state_backend,
+                              **self.state_kw)
         self.alarm_dir = alarm_dir
         self.alarm_format = alarm_format
         # per-tenant host-side stream state (created by add_tenant)
@@ -137,7 +150,9 @@ class DetectionEngine:
         cfg = dict(epoch=svc.epoch, n_slots=state_slots(svc.state),
                    backend=svc.backend, backend_kw=svc.backend_kw,
                    md_backend=svc.md_backend, md_kw=svc.md_kw,
-                   mode=svc.mode)
+                   mode=svc.mode,
+                   state_backend=state_backend_of(svc.state),
+                   state_kw=state_config(svc.state))
         cfg.update(kw)
         return cls(svc.net, svc.threshold, **cfg)
 
@@ -154,7 +169,8 @@ class DetectionEngine:
         self._results[tid] = [[], [], []]
         self._lat[tid] = []
         self._counters[tid] = {"pkts_in": 0, "pkts_dropped": 0,
-                               "pkts_processed": 0, "records": 0, "alarms": 0}
+                               "pkts_processed": 0, "records": 0, "alarms": 0,
+                               "slot_collisions": 0}
         return tid
 
     def remove_tenant(self, tid: int) -> None:
@@ -256,6 +272,14 @@ class DetectionEngine:
         tenant-batched fused call.  Returns immediately with the batch in
         flight; ``self.pool.stacked`` is donated and replaced."""
         chunks = [self._pop(t, size) for t in tids]
+        if self.state_backend == "dense":
+            # dense-mode aliasing telemetry: distinct flow keys whose slots
+            # collide inside this chunk (host-side numpy twin of the device
+            # hash, so the fused call is untouched).  Sketch pools absorb
+            # collisions by design and keep the counter at zero.
+            for t, c in zip(tids, chunks):
+                self._counters[t]["slot_collisions"] += \
+                    slot_collisions(c, self.n_slots)["total"]
         pk = {k: jnp.asarray(np.stack([c[k] for c in chunks]))
               for k in chunks[0]}
         ids = jnp.asarray(np.asarray(tids, np.int32))

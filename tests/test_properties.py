@@ -205,6 +205,81 @@ def test_auc_random_is_half(n, seed):
 
 
 # ---------------------------------------------------------------------------
+# flow-table hashing: salt independence, uniformity, sketch-row independence
+# ---------------------------------------------------------------------------
+def _rand_fields(n, n_fields, seed):
+    rng = np.random.default_rng(seed)
+    return tuple(rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+                 for _ in range(n_fields))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 10 ** 6),
+       st.integers(0, 2 ** 32 - 1), st.integers(1, 2 ** 32 - 1))
+def test_hash_salt_independence(n_fields, seed, salt, dsalt):
+    """Two distinct salts behave as independent hash functions: over
+    DISTINCT keys, the two 32-bit streams agree only at the ~2^-32 chance
+    rate — operationally, a flow's slot under one salt tells you nothing
+    about its slot under another (the property the collision fingerprint
+    and the sketch rows rely on)."""
+    from repro.core.state import np_hash_fields
+    n = 2048
+    fields = _rand_fields(n, n_fields, seed)
+    a = np_hash_fields(fields, salt)
+    b = np_hash_fields(fields, (salt ^ dsalt) & 0xFFFFFFFF)
+    assert (a == b).mean() < 0.01
+    # and slot-level (mod W) agreement stays near the 1/W chance rate
+    w = 64
+    assert ((a % w) == (b % w)).mean() < 4.0 / w
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from([16, 64, 256]))
+def test_hash_slot_distribution_uniform(seed, w):
+    """Random distinct keys spread evenly over W slots: every slot load
+    stays within 5 sigma of the binomial expectation (a catastrophically
+    biased mix — the failure mode that silently wrecks both the dense
+    table and the sketch — lands far outside)."""
+    from repro.core.state import KEY_SALTS, np_hash_fields
+    n = 8192
+    fields = _rand_fields(n, 2, seed)
+    for salt in KEY_SALTS.values():
+        counts = np.bincount(np_hash_fields(fields, salt) % w, minlength=w)
+        exp = n / w
+        tol = 5.0 * np.sqrt(exp * (1.0 - 1.0 / w))
+        assert np.abs(counts - exp).max() <= tol, (salt, counts.max())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 4))
+def test_sketch_rows_pairwise_independent(seed, rows):
+    """Distinct sketch rows hash like independent functions: for any row
+    pair the per-key column agreement stays near the 1/W chance rate, so
+    a flow collided in one row is (almost) never collided in all of them
+    — the premise of the Count-Min min-across-rows read."""
+    from repro.core.sketch import sketch_packet_rows
+    from repro.traffic.generator import to_jnp
+    n, w = 4096, 64
+    rng = np.random.default_rng(seed)
+    pk = to_jnp({
+        "ts": np.zeros(n, np.float32),
+        "src": rng.integers(0, 2 ** 32, n, dtype=np.uint32),
+        "dst": rng.integers(0, 2 ** 32, n, dtype=np.uint32),
+        "sport": rng.integers(0, 2 ** 16, n, dtype=np.uint32),
+        "dport": rng.integers(0, 2 ** 16, n, dtype=np.uint32),
+        "proto": np.full(n, 6, np.uint32),
+        "length": np.full(n, 100, np.float32),
+    })
+    cols = sketch_packet_rows(pk, rows, w)
+    for key in ("src_ip", "channel", "socket"):
+        c = np.asarray(cols[key])
+        for i in range(rows):
+            for j in range(i + 1, rows):
+                agree = (c[:, i] == c[:, j]).mean()
+                assert agree < 4.0 / w, (key, i, j, agree)
+
+
+# ---------------------------------------------------------------------------
 # Peregrine pipeline invariance: shifting all timestamps by a constant
 # ---------------------------------------------------------------------------
 @settings(max_examples=5, deadline=None)

@@ -1,0 +1,391 @@
+"""State-backend abstraction: dense/sketch registry, Count-Min semantics,
+and the acceptance invariants of the pluggable flow-table layer.
+
+The load-bearing claims (DESIGN.md §11):
+
+* the ``dense`` registry entry is the pre-registry ``init_state`` —
+  bit-for-bit, so no dense caller can have moved;
+* a ``rows=1`` sketch of equal width hashes flows to exactly the dense
+  slots (row 0 keeps the dense salt) and its STATE UPDATE degenerates to
+  the dense serial oracle bit-for-bit; the emitted sigma/magnitude/radius
+  statistics — pure outputs that never feed state — agree to float
+  rounding only (XLA contracts the variance expression differently in the
+  two scan bodies; same tolerance family as the segmented-scan backend);
+* the Pallas sketch kernel reproduces the pure-JAX reference;
+* Count-Min with conservative update never under-estimates the decayed
+  packet count;
+* eviction (``evict_age``) makes idle cells read as empty;
+* fixed-size sketch state absorbs a stream with ~1M distinct flows
+  through BOTH deployment paths (fused service + multi-tenant engine).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FEATURE_NAMES, N_FEATURES, compute_features,
+                        init_state)
+from repro.core.state import (KEY_SALTS, StatePool, available_state_backends,
+                              hash_fields, init_state_stacked, np_hash_fields,
+                              slot_collisions, state_backend_of, state_config,
+                              state_slots, state_spec_of, _np_key_fields)
+from repro.core.sketch import row_salt, sketch_packet_rows
+from repro.traffic.generator import ATTACKS, benign_trace, to_jnp
+
+N_PKTS = 256
+N_SLOTS = 512
+
+# cov/pcc divide by near-cancelling variances; std/radius are sqrts of the
+# same cancellation — the columns where fp reassociation shows up as O(0.1)
+# abs on O(1e5) inputs (cf. tests/test_backends.py's scan tolerance)
+_LOOSE = np.array([i for i, nm in enumerate(FEATURE_NAMES)
+                   if nm.endswith((":cov", ":pcc", ":radius", ":std"))])
+_TIGHT = np.setdiff1d(np.arange(N_FEATURES), _LOOSE)
+
+
+def _trace(attack: str, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    ben = benign_trace(160, 6.0, rng)
+    atk = ATTACKS[attack](120, 1.0, 5.0, rng)
+    out = {k: np.concatenate([ben[k], atk[k]]) for k in ben}
+    order = np.argsort(out["ts"], kind="stable")
+    out = {k: v[order][:N_PKTS] for k, v in out.items()}
+    return {k: jnp.asarray(v) for k, v in out.items() if k != "label"}
+
+
+def _flow_trace(n: int, seed: int = 0):
+    """n packets, every one a NEW flow under all four key types."""
+    rng = np.random.default_rng(seed)
+    return {
+        "ts": (np.arange(n) * 1e-4).astype(np.float32),
+        "src": np.arange(1, n + 1, dtype=np.uint32),
+        "dst": np.full(n, 0xC0A80001, np.uint32),
+        "sport": (np.arange(n, dtype=np.uint32) % 60000 + 1024
+                  ).astype(np.uint32),
+        "dport": np.full(n, 80, np.uint32),
+        "proto": np.full(n, 6, np.uint32),
+        "length": rng.integers(60, 1500, n).astype(np.float32),
+    }
+
+
+def _assert_feats_close(got, want, msg=""):
+    """Rounding-only feature agreement: tight everywhere except the
+    variance-cancellation columns, which get the abs slack their O(1e5)
+    inputs imply."""
+    got, want = np.asarray(got), np.asarray(want)
+    d = np.abs(got - want)
+    ok_t = d[:, _TIGHT] <= 1e-3 + 1e-4 * np.abs(want[:, _TIGHT])
+    ok_l = d[:, _LOOSE] <= 0.5 + 1e-3 * np.abs(want[:, _LOOSE])
+    assert ok_t.all(), (msg, d[:, _TIGHT].max())
+    assert ok_l.all(), (msg, d[:, _LOOSE].max())
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_dense_is_the_default_bitwise():
+    assert {"dense", "sketch"} <= set(available_state_backends())
+    a = init_state(N_SLOTS)
+    b = init_state(N_SLOTS, state_backend="dense")
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert state_backend_of(a) == "dense"
+    assert state_config(a) == {}
+    assert state_slots(a) == N_SLOTS
+
+
+def test_registry_sketch_identification_and_config():
+    s = init_state(64, state_backend="sketch", rows=3, evict_age=2.5)
+    assert state_backend_of(s) == "sketch"
+    assert state_slots(s) == 64
+    assert state_config(s) == {"rows": 3, "evict_age": 2.5}
+    assert state_spec_of(s).compute is not None
+    # row 0 of every key type keeps the dense salt
+    for base in KEY_SALTS.values():
+        assert row_salt(base, 0) == base
+
+
+def test_registry_errors():
+    with pytest.raises(ValueError, match="unknown state backend"):
+        init_state(64, state_backend="nope")
+    with pytest.raises(ValueError, match="at least one row"):
+        init_state(64, state_backend="sketch", rows=0)
+    pk = _trace("syn_dos")
+    with pytest.raises(ValueError, match="sketch-backed state"):
+        compute_features(init_state(64), pk, backend="sketch")
+    sk = init_state(64, state_backend="sketch", rows=2)
+    with pytest.raises(ValueError, match="exact arithmetic only"):
+        compute_features(sk, pk, backend="serial", mode="switch")
+
+
+# ---------------------------------------------------------------------------
+# rows=1 degeneracy: the collision-free sizing of the sketch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("attack", sorted(ATTACKS))
+def test_sketch_r1_state_bitwise_dense(attack):
+    pk = _trace(attack)
+    st_d, f_d = compute_features(init_state(N_SLOTS), pk, backend="serial")
+    st_s, f_s = compute_features(
+        init_state(N_SLOTS, state_backend="sketch", rows=1), pk)
+    for grp in ("uni", "bi"):
+        for k in st_d[grp]:
+            if k == "rr":           # dense round-robin counter: no sketch twin
+                continue
+            np.testing.assert_array_equal(
+                np.asarray(st_s[grp][k])[:, 0], np.asarray(st_d[grp][k]),
+                err_msg=f"{attack}/{grp}/{k}")
+    _assert_feats_close(f_s, f_d, attack)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs pure-JAX reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows", [1, 3])
+def test_sketch_kernel_matches_reference(rows):
+    pk = _trace("mirai")
+    W = 64                          # small width -> real collisions at R=3
+    st0 = init_state(W, state_backend="sketch", rows=rows)
+    st_r, f_r = compute_features(
+        jax.tree_util.tree_map(jnp.copy, st0), pk)
+    st_k, f_k = compute_features(st0, pk, backend="pallas", chunk=64)
+    _assert_feats_close(f_k, f_r, f"rows={rows}")
+    for grp in ("uni", "bi"):
+        for k in st_r[grp]:
+            np.testing.assert_allclose(
+                np.asarray(st_k[grp][k]), np.asarray(st_r[grp][k]),
+                rtol=1e-3, atol=0.1, err_msg=f"rows={rows}/{grp}/{k}")
+
+
+def test_sketch_kernel_chunked_matches_one_shot():
+    pk = _trace("mirai")
+    st0 = init_state(64, state_backend="sketch", rows=2)
+    _, f_once = compute_features(
+        jax.tree_util.tree_map(jnp.copy, st0), pk, backend="pallas",
+        chunk=64)
+    st = st0
+    outs = []
+    for i in range(0, N_PKTS, 64):
+        chunk = {k: v[i:i + 64] for k, v in pk.items()}
+        st, f = compute_features(st, chunk, backend="pallas", chunk=32)
+        outs.append(np.asarray(f))
+    np.testing.assert_allclose(np.concatenate(outs), np.asarray(f_once),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Count-Min semantics
+# ---------------------------------------------------------------------------
+def test_sketch_never_underestimates_decayed_count():
+    """Conservative update keeps every estimate one-sided: the w features
+    from a heavily-collided sketch are >= the collision-free truth."""
+    pk = _trace("ddos_hulk")
+    # the truth table must be VERIFIED collision-free — at 2^16 slots this
+    # trace still aliases two channels, which fabricates an underestimate
+    np_pk = {k: np.asarray(v) for k, v in pk.items()}
+    n_true = next(n for n in (1 << 18, 1 << 22, 1 << 26)
+                  if slot_collisions(np_pk, n)["total"] == 0)
+    _, f_true = compute_features(init_state(n_true), pk, backend="serial")
+    _, f_sk = compute_features(
+        init_state(16, state_backend="sketch", rows=2), pk)
+    w_cols = [i for i, nm in enumerate(FEATURE_NAMES) if nm.endswith(":w")]
+    over = np.asarray(f_sk)[:, w_cols] - np.asarray(f_true)[:, w_cols]
+    assert (over >= -2e-3).all(), over.min()
+    # and the 16-wide sketch genuinely collided (the test has teeth)
+    assert (over > 0.5).any()
+
+
+def test_sketch_eviction_ages_out_idle_cells():
+    n = 8
+    base = _flow_trace(n)
+    base["src"][:] = 7          # ONE flow...
+    base["sport"][:] = 5000
+    base["ts"][:] = np.arange(n, dtype=np.float32) * 0.25
+    base["ts"][-1] += 600.0     # ...idle 10 minutes before its last packet
+    # the slowest decay atom (lambda = 1/60) is the only one with mass
+    # left after a 10-minute gap — the others read 1.0 either way
+    w_col = FEATURE_NAMES.index(f"src_ip:{1 / 60}:w")
+
+    def w_last(evict_age):
+        st = init_state(32, state_backend="sketch", rows=2,
+                        evict_age=evict_age)
+        _, f = compute_features(st, to_jnp(base))
+        return float(np.asarray(f)[-1, w_col])
+
+    assert w_last(0.0) > 1.0        # no aging: decayed history survives
+    assert w_last(60.0) == 1.0      # aged out: the flow restarts fresh
+
+
+def test_sketch_packet_rows_row0_is_dense_mapping():
+    pk = to_jnp(_flow_trace(64))
+    from repro.core.state import packet_slots
+    dense = packet_slots(pk, 64)
+    rows = sketch_packet_rows(pk, 3, 64)
+    for k in KEY_SALTS:
+        np.testing.assert_array_equal(np.asarray(rows[k])[:, 0],
+                                      np.asarray(dense[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(rows["dir"]),
+                                  np.asarray(dense["dir"]))
+
+
+# ---------------------------------------------------------------------------
+# serving layers
+# ---------------------------------------------------------------------------
+def _mixed_trace(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {k: np.asarray(v) for k, v in benign_trace(n, 5.0, rng).items()
+            if k != "label"}
+
+
+def test_sketch_fused_service_matches_staged():
+    from repro.serving import DetectionService
+    tr = _mixed_trace(2048)
+    svc = DetectionService(epoch=128, n_slots=256, state_backend="sketch",
+                           state_kw={"rows": 2})
+    svc.observe_stream({k: v[:1024] for k, v in tr.items()}, chunk=512)
+    svc.fit(seed=0)
+    ev = {k: v[1024:] for k, v in tr.items()}
+    snap = jax.tree_util.tree_map(jnp.copy, svc.state)
+    count = svc.pkt_count
+    i_f, s_f, a_f = svc.process_stream(ev, chunk=512, fused=True)
+    svc.state, svc.pkt_count = snap, count
+    i_s, s_s, a_s = svc.process_stream(ev, chunk=512, fused=False)
+    np.testing.assert_array_equal(i_f, i_s)
+    np.testing.assert_allclose(s_f, s_s, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(a_f, a_s)
+
+
+def test_sketch_state_pool_lifecycle():
+    pool = StatePool(n_tenants=3, n_slots=64, state_backend="sketch",
+                     rows=2, evict_age=5.0)
+    t = pool.alloc()
+    st = pool.read(t)
+    assert state_backend_of(st) == "sketch"
+    assert state_config(st) == {"rows": 2, "evict_age": 5.0}
+    assert state_slots(st) == 64
+    pk = to_jnp(_flow_trace(32))
+    st2, _ = compute_features(st, pk)
+    pool.write(t, st2)
+    np.testing.assert_array_equal(np.asarray(pool.read(t)["uni"]["w"]),
+                                  np.asarray(st2["uni"]["w"]))
+    pool.reset(t)
+    assert float(np.asarray(pool.read(t)["uni"]["w"]).max()) == 0.0
+    # stacking broadcasts the scalar evict_age leaf per tenant
+    stk = init_state_stacked(2, 16, state_backend="sketch", rows=1,
+                             evict_age=3.0)
+    assert stk["evict_age"].shape == (2,)
+
+
+def test_engine_inherits_sketch_backend_from_service():
+    from repro.serving import DetectionEngine, DetectionService
+    tr = _mixed_trace(3072)
+    svc = DetectionService(epoch=128, n_slots=128, state_backend="sketch",
+                           state_kw={"rows": 2})
+    svc.observe_stream({k: v[:2048] for k, v in tr.items()}, chunk=1024)
+    svc.fit(seed=0)
+    eng = DetectionEngine.from_service(svc, n_tenants=2, chunk=512)
+    assert eng.state_backend == "sketch"
+    assert eng.state_kw == {"rows": 2, "evict_age": 0.0}
+    ev = {k: v[2048:] for k, v in tr.items()}
+    t0, t1 = eng.add_tenant(), eng.add_tenant()
+    res = eng.run({t0: ev, t1: ev})
+    assert len(res[t0][0])          # records flowed
+    for a, b in zip(res[t0], res[t1]):      # tenant isolation: same in ->
+        np.testing.assert_array_equal(a, b)  # same out
+    # sketch states have no per-flow slots to collide
+    assert eng.stats()["tenants"][t0]["slot_collisions"] == 0
+
+
+def test_dense_engine_counts_slot_collisions():
+    from repro.serving import DetectionEngine, DetectionService
+    tr = _mixed_trace(3072)
+    svc = DetectionService(epoch=128, n_slots=32)   # tiny table -> aliasing
+    svc.observe_stream({k: v[:2048] for k, v in tr.items()}, chunk=1024)
+    svc.fit(seed=0)
+    eng = DetectionEngine.from_service(svc, n_tenants=1, chunk=512)
+    t = eng.add_tenant()
+    eng.run({t: {k: v[2048:] for k, v in tr.items()}})
+    assert eng.stats()["tenants"][t]["slot_collisions"] > 0
+
+
+# ---------------------------------------------------------------------------
+# collision telemetry + hash twins
+# ---------------------------------------------------------------------------
+def test_slot_collisions_endpoints():
+    pk = _flow_trace(64)
+    # huge table: 64 flows cannot alias
+    assert slot_collisions(pk, 1 << 20)["total"] == 0
+    # one slot: every distinct key beyond the first collides, per key type
+    c1 = slot_collisions(pk, 1)
+    fields = _np_key_fields(pk)
+    for name, f in fields.items():
+        distinct = len(set(zip(*[np.asarray(x) for x in f])))
+        assert c1[name] == distinct - 1, name
+    assert c1["total"] == sum(c1[k] for k in fields)
+
+
+def test_hash_uniformity_and_row_independence_seeded():
+    """Seeded twin of the tests/test_properties.py hash properties, so
+    the invariants stay covered when ``hypothesis`` is absent: slot loads
+    within 5 sigma of binomial, and distinct sketch rows agreeing at the
+    chance rate."""
+    rng = np.random.default_rng(7)
+    n, w = 8192, 64
+    fields = tuple(rng.integers(0, 2 ** 32, n, dtype=np.uint32)
+                   for _ in range(2))
+    for salt in KEY_SALTS.values():
+        counts = np.bincount(np_hash_fields(fields, salt) % w, minlength=w)
+        exp = n / w
+        assert np.abs(counts - exp).max() <= 5.0 * np.sqrt(exp), salt
+    pk = to_jnp({
+        "ts": np.zeros(n, np.float32),
+        "src": rng.integers(0, 2 ** 32, n, dtype=np.uint32),
+        "dst": rng.integers(0, 2 ** 32, n, dtype=np.uint32),
+        "sport": rng.integers(0, 2 ** 16, n, dtype=np.uint32),
+        "dport": rng.integers(0, 2 ** 16, n, dtype=np.uint32),
+        "proto": np.full(n, 6, np.uint32),
+        "length": np.full(n, 100, np.float32),
+    })
+    cols = sketch_packet_rows(pk, 3, w)
+    for key in ("src_ip", "channel", "socket"):
+        c = np.asarray(cols[key])
+        for i in range(3):
+            for j in range(i + 1, 3):
+                assert (c[:, i] == c[:, j]).mean() < 4.0 / w, (key, i, j)
+
+
+def test_np_hash_fields_matches_device_hash():
+    rng = np.random.default_rng(3)
+    fields = tuple(rng.integers(0, 2 ** 32, 4096, dtype=np.uint32)
+                   for _ in range(3))
+    for salt in (*KEY_SALTS.values(), 0x7F4A7C15, row_salt(3, 2)):
+        np.testing.assert_array_equal(
+            np_hash_fields(fields, salt),
+            np.asarray(hash_fields(tuple(map(jnp.asarray, fields)), salt)))
+
+
+# ---------------------------------------------------------------------------
+# scale: fixed memory under ~1M distinct flows, both deployment paths
+# ---------------------------------------------------------------------------
+def test_sketch_fixed_memory_million_distinct_flows():
+    from repro.serving import DetectionEngine, DetectionService
+    N = 1 << 20
+    flows = _flow_trace(N)
+    svc = DetectionService(epoch=8192, n_slots=1024,
+                           state_backend="sketch", state_kw={"rows": 2})
+    svc.observe_stream({k: v[:65536] for k, v in flows.items()}, chunk=32768)
+    svc.fit(seed=0)
+    idx, scores, alarms = svc.process_stream(
+        {k: v[65536:] for k, v in flows.items()}, chunk=32768)
+    assert len(idx) == (N - 65536) // 8192
+    assert np.isfinite(scores).all()
+    # memory stayed fixed: the tables are still (rows=2, width=1024)
+    assert svc.state["uni"]["w"].shape[1:3] == (2, 1024)
+    assert state_slots(svc.state) == 1024
+
+    eng = DetectionEngine.from_service(svc, n_tenants=1, chunk=32768)
+    t = eng.add_tenant()
+    res = eng.run({t: flows})
+    assert len(res[t][0]) == N // 8192
+    assert np.isfinite(res[t][1]).all()
