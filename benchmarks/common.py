@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import time
 from typing import Callable, Dict
 
@@ -33,8 +34,25 @@ def env_stamp() -> Dict:
             "device_count": jax.device_count()}
 
 
+_MESH_ROW = re.compile(r"_mesh(\d+)_")
+
+
 def save(name: str, payload: Dict) -> str:
     payload = {**payload, "env": env_stamp()}
+    # a ``<label>_mesh<D>_pps`` row claims a D-device measurement; saving
+    # one from a process that never saw D devices (e.g. the forced-device
+    # flag was dropped, or a payload is replayed on a smaller host) would
+    # commit a 1-device number wearing a mesh label — refuse instead of
+    # silently mixing topologies in BENCH_*.json
+    ndev = payload["env"]["device_count"]
+    for k in payload:
+        m = _MESH_ROW.search(str(k))
+        if m and int(m.group(1)) > ndev:
+            raise ValueError(
+                f"mesh row {k!r} claims {m.group(1)} devices but this "
+                f"process sees {ndev} — re-run under "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{m.group(1)} (or --devices {m.group(1)})")
     os.makedirs(RESULTS, exist_ok=True)
     fn = os.path.join(RESULTS, f"{name}.json")
     with open(fn, "w") as f:

@@ -27,11 +27,13 @@ instead, on top of the segmented-scan pipeline (``core/parallel.py``):
 
 Placement: on one device the bucket axis is a vectorised batch dimension.
 When a mesh is bound and the ``flow_shards`` logical axis has a rule
-(distributed/sharding.py), the per-bucket local scans run under
-``shard_map`` over that axis — each device scans only its buckets; the
-O(S) tail combine and the elementwise fix-up stay outside (they are
-negligible).  Ragged batches are padded to a bucket multiple with
-sentinel-slot packets that never store back and are never emitted.
+(distributed/sharding.py), the WHOLE two-level scan runs under
+``shard_map`` over that axis (``ShardContext``): each device scans only
+its buckets, all-gathers the O(S) per-bucket tail summaries — the only
+collective, a few KB — runs the tiny cross-bucket combine redundantly,
+and fixes up its own buckets locally.  No O(n) step ever crosses a shard
+boundary (DESIGN.md §12).  Ragged batches are padded to a bucket multiple
+with sentinel-slot packets that never store back and are never emitted.
 
 ``process_bucketed_sampled`` is the record-sampled twin for the fused
 serving step (DESIGN.md §8/§9), registered in ``core/backends`` so a
@@ -45,12 +47,9 @@ from typing import Dict, Tuple
 import jax
 
 from repro.core.parallel import _process_parallel_impl
-from repro.distributed.sharding import ambient_mesh, flow_shards_binding
-
-try:  # moved out of jax.experimental in newer releases
-    from jax.experimental.shard_map import shard_map
-except ImportError:  # pragma: no cover - jax >= 0.6 spelling
-    from jax import shard_map
+from repro.distributed.sharding import (
+    ShardContext, ambient_mesh, flow_shards_binding,
+)
 
 
 def _resolve_placement(buckets: int):
@@ -81,32 +80,27 @@ def _resolve_placement(buckets: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _make_smap(mesh, binding):
-    """A transform wrapping the local per-bucket scans in ``shard_map``
-    over the bucket (leading) axis.  ``None`` when unplaced — the scans
-    then run as a plain vectorised batch dimension on one device.  Cached
-    so repeated calls under one placement share jit cache entries.
+def _shard_ctx(mesh, binding, n_devices: int):
+    """The ``ShardContext`` placing the two-level scans on ``mesh``, or
+    ``None`` when unplaced (the bucket axis then stays a plain vectorised
+    batch dimension on one device).  Cached per (mesh, binding, device
+    count) so repeated calls under one placement share one context — and
+    therefore one jit cache entry.  ``n_devices`` is in the key explicitly
+    (on top of ``Mesh.__hash__``, which already folds in its devices) so a
+    re-bound mesh under a different forced-device topology can never be
+    served a stale compiled step.
     """
     if mesh is None:
         return None
-    from jax.sharding import PartitionSpec as P
-    spec = P(binding)  # leading (bucket) axis sharded, rest replicated
-
-    def smap(fn):
-        # the local scans are collective-free (each bucket is independent),
-        # so in/out specs are a plain prefix spec over every leaf
-        return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)
-
-    return smap
+    return ShardContext(mesh, binding)
 
 
 @functools.lru_cache(maxsize=None)
-def _bucketed_jit(buckets: int, mesh, binding):
-    smap = _make_smap(mesh, binding)
-
+def _bucketed_jit(buckets: int, shard, n_devices: int):
     @jax.jit
     def run(state, pkts):
-        return _process_parallel_impl(state, pkts, chunks=buckets, smap=smap)
+        return _process_parallel_impl(state, pkts, chunks=buckets,
+                                      shard=shard)
 
     return run
 
@@ -124,7 +118,9 @@ def process_bucketed(state: Dict, pkts: Dict[str, jax.Array],
     if mode != "exact":
         raise ValueError("bucketed backend is exact-mode only")
     mesh, binding = _resolve_placement(buckets)
-    return _bucketed_jit(buckets, mesh, binding)(state, pkts)
+    ndev = jax.device_count()
+    shard = _shard_ctx(mesh, binding, ndev)
+    return _bucketed_jit(buckets, shard, ndev)(state, pkts)
 
 
 def process_bucketed_sampled(state: Dict, pkts: Dict[str, jax.Array],
@@ -136,6 +132,6 @@ def process_bucketed_sampled(state: Dict, pkts: Dict[str, jax.Array],
     caller (serving/fused.py) inlines it into its own donated jit; the
     ambient placement is resolved at trace time."""
     mesh, binding = _resolve_placement(buckets)
-    smap = _make_smap(mesh, binding)
+    shard = _shard_ctx(mesh, binding, jax.device_count())
     return _process_parallel_impl(state, pkts, sample_idx,
-                                  chunks=buckets, smap=smap)
+                                  chunks=buckets, shard=shard)

@@ -99,7 +99,7 @@ def _excl_shift(t, identity):
     return jnp.concatenate([jnp.full_like(t[:1], identity), t[:-1]], axis=0)
 
 
-def seg_linear_scan(seg_start, delta, x, chunks: int = 1, smap=None):
+def seg_linear_scan(seg_start, delta, x, chunks: int = 1, shard=None):
     """Segmented A_i = delta_i * A_{i-1} + x_i (A resets at segment starts).
 
     seg_start: (n,) bool; delta, x: (n, ...) broadcastable (``delta`` may be
@@ -110,9 +110,13 @@ def seg_linear_scan(seg_start, delta, x, chunks: int = 1, smap=None):
     equal slices of the array (each slice's flows are disjoint except for
     segments straddling a cut), then one exclusive combine over the S
     per-chunk tail summaries, then an O(n) elementwise fix-up — the same
-    associative combine, reassociated.  ``smap`` optionally wraps the local
-    scans (e.g. ``shard_map`` over a mesh axis — core/bucketed.py); it must
-    be a transform ``fn -> fn`` preserving signatures.
+    associative combine, reassociated.  ``shard`` (a
+    ``distributed.sharding.ShardContext`` — core/bucketed.py builds one
+    from the ambient mesh) places the whole two-level scan under
+    ``shard_map`` over the chunk axis with every O(n) step shard-local:
+    each device scans its own chunks, all-gathers the O(S) per-chunk tail
+    summaries (the ONLY collective — a few KB), runs the tiny combine
+    redundantly, and fixes up its own chunks.  No full-batch collectives.
     """
     f = _expand(seg_start, delta.ndim)
     if chunks <= 1:
@@ -121,29 +125,42 @@ def seg_linear_scan(seg_start, delta, x, chunks: int = 1, smap=None):
         return a
     fc, dc, xc = (_chunk2(a, chunks) for a in (f, delta, x))
 
-    def local(fc, dc, xc):
-        return jax.lax.associative_scan(_linear_combine, (fc, dc, xc),
-                                        axis=1)
+    if shard is None:
+        lf, ls, la = jax.lax.associative_scan(_linear_combine, (fc, dc, xc),
+                                              axis=1)
+        # carry across cuts: segmented combine over per-chunk tails, excl.
+        _, _, pa = jax.lax.associative_scan(
+            _linear_combine, (lf[:, -1], ls[:, -1], la[:, -1]), axis=0)
+        pa = _excl_shift(pa, 0)
+        # combine(carry, local) per element; lf kills the carry as soon as
+        # the chunk has seen a real segment start
+        a = jnp.where(lf, la, pa[:, None] * ls + la)
+        return a.reshape((x.shape[0],) + a.shape[2:])
 
-    lf, ls, la = (local if smap is None else smap(local))(fc, dc, xc)
-    # carry across cuts: segmented combine over per-chunk tails, exclusive
-    _, _, pa = jax.lax.associative_scan(
-        _linear_combine, (lf[:, -1], ls[:, -1], la[:, -1]), axis=0)
-    pa = _excl_shift(pa, 0)
-    # combine(carry, local) per element; lf kills the carry as soon as the
-    # chunk has seen a real segment start
-    a = jnp.where(lf, la, pa[:, None] * ls + la)
+    n_local = chunks // shard.size
+
+    def local(fc, dc, xc):
+        lf, ls, la = jax.lax.associative_scan(_linear_combine, (fc, dc, xc),
+                                              axis=1)
+        gf, gs, ga = (shard.gather_tails(t)
+                      for t in (lf[:, -1], ls[:, -1], la[:, -1]))
+        _, _, pa = jax.lax.associative_scan(
+            _linear_combine, (gf, gs, ga), axis=0)
+        pa = shard.local_chunks(_excl_shift(pa, 0), n_local)
+        return jnp.where(lf, la, pa[:, None] * ls + la)
+
+    a = shard.wrap(local)(fc, dc, xc)
     return a.reshape((x.shape[0],) + a.shape[2:])
 
 
-def seg_last_scan(seg_start, valid, value, chunks: int = 1, smap=None):
+def seg_last_scan(seg_start, valid, value, chunks: int = 1, shard=None):
     """Segmented latest-valid-value (inclusive). Returns (found, last_value).
 
     ``found[i]`` False means no valid element yet in i's segment.  ``valid``
     may carry extra trailing dims narrower than ``value`` (e.g. a per-
     direction mask ``(n, 2)`` against values ``(n, 2, ND, k)``) — it
     broadcasts inside the combine, and ``found`` is returned at the
-    broadcast shape of ``valid``.  ``chunks``/``smap`` as in
+    broadcast shape of ``valid``.  ``chunks``/``shard`` as in
     :func:`seg_linear_scan`.
     """
     f = _expand(seg_start, value.ndim)
@@ -153,18 +170,38 @@ def seg_last_scan(seg_start, valid, value, chunks: int = 1, smap=None):
             _last_combine, (f, v, value), axis=0)
         return found, val
     fc, vc, xc = (_chunk2(a, chunks) for a in (f, v, value))
+    n = value.shape[0]
+
+    if shard is None:
+        lf, lv, lx = jax.lax.associative_scan(_last_combine, (fc, vc, xc),
+                                              axis=1)
+        _, pv, px = jax.lax.associative_scan(
+            _last_combine, (lf[:, -1], lv[:, -1], lx[:, -1]), axis=0)
+        pv = _excl_shift(pv, False)
+        px = _excl_shift(px, 0)
+        found = jnp.where(lf, lv, pv[:, None] | lv)
+        val = jnp.where(lv, lx,
+                        jnp.where(lf, jnp.zeros_like(lx), px[:, None]))
+        return (found.reshape((n,) + found.shape[2:]),
+                val.reshape((n,) + val.shape[2:]))
+
+    n_local = chunks // shard.size
 
     def local(fc, vc, xc):
-        return jax.lax.associative_scan(_last_combine, (fc, vc, xc), axis=1)
+        lf, lv, lx = jax.lax.associative_scan(_last_combine, (fc, vc, xc),
+                                              axis=1)
+        gf, gv, gx = (shard.gather_tails(t)
+                      for t in (lf[:, -1], lv[:, -1], lx[:, -1]))
+        _, pv, px = jax.lax.associative_scan(_last_combine, (gf, gv, gx),
+                                             axis=0)
+        pv = shard.local_chunks(_excl_shift(pv, False), n_local)
+        px = shard.local_chunks(_excl_shift(px, 0), n_local)
+        found = jnp.where(lf, lv, pv[:, None] | lv)
+        val = jnp.where(lv, lx,
+                        jnp.where(lf, jnp.zeros_like(lx), px[:, None]))
+        return found, val
 
-    lf, lv, lx = (local if smap is None else smap(local))(fc, vc, xc)
-    _, pv, px = jax.lax.associative_scan(
-        _last_combine, (lf[:, -1], lv[:, -1], lx[:, -1]), axis=0)
-    pv = _excl_shift(pv, False)
-    px = _excl_shift(px, 0)
-    found = jnp.where(lf, lv, pv[:, None] | lv)
-    val = jnp.where(lv, lx, jnp.where(lf, jnp.zeros_like(lx), px[:, None]))
-    n = value.shape[0]
+    found, val = shard.wrap(local)(fc, vc, xc)
     return (found.reshape((n,) + found.shape[2:]),
             val.reshape((n,) + val.shape[2:]))
 
@@ -208,7 +245,7 @@ def _dir_interleave_perm(start, end, d):
 # one directional stream table pass
 # ---------------------------------------------------------------------------
 def stream_pass(tab, stream_ids, ts, lens, n_streams, order=None,
-                sample=None, chunks: int = 1, smap=None):
+                sample=None, chunks: int = 1, shard=None):
     """Vectorised decayed-atom update for one table of streams.
 
     tab: {"last_t","w","ls","ss"} each (n_streams, N_DECAY).
@@ -218,7 +255,7 @@ def stream_pass(tab, stream_ids, ts, lens, n_streams, order=None,
     ``sample`` restricts the returned atoms to those original-order rows
     (the table update always covers every packet) — the fused serving step
     only ever reads the sampled records, so the full-width gather back to
-    packet order is skipped.  ``chunks``/``smap`` select the two-level
+    packet order is skipped.  ``chunks``/``shard`` select the two-level
     bucketed scan (core/bucketed.py).
 
     The three decayed atoms ride ONE stacked scan over ``(n, N_DECAY, 3)``
@@ -254,7 +291,7 @@ def stream_pass(tab, stream_ids, ts, lens, n_streams, order=None,
     tab_a = jnp.stack([tab["w"], tab["ls"], tab["ss"]], axis=-1)[sid]
     x0 = jnp.where(start[:, None, None], xs + delta[..., None] * tab_a, xs)
     atoms3 = seg_linear_scan(start, delta[..., None], x0,
-                             chunks=chunks, smap=smap)    # (n, ND, 3)
+                             chunks=chunks, shard=shard)    # (n, ND, 3)
     w, ls, ss = atoms3[..., 0], atoms3[..., 1], atoms3[..., 2]
 
     # store back last element of each segment (indices unique by construction)
@@ -283,7 +320,7 @@ def _stats(w, ls, ss):
 # ---------------------------------------------------------------------------
 def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
                  order=None, dir_gather=None, sample=None, chunks: int = 1,
-                 smap=None):
+                 shard=None):
     """Cross-direction state for ONE bi key type.
 
     bi_k: the per-key-type slices of the bi table (each (n_slots, ...)).
@@ -333,7 +370,7 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
                               (n, 2) + lanes.shape[1:])       # (n, 2, ND, 4)
     per_dir = jnp.stack([d == 0, d == 1], axis=1)             # (n, 2)
     found, val = seg_last_scan(start, per_dir, latest,
-                               chunks=chunks, smap=smap)
+                               chunks=chunks, shard=shard)
     found0, found1 = found[:, 0], found[:, 1]                 # (n, 1, 1)
     val0, val1 = val[:, 0, :, :3], val[:, 1, :, :3]           # (n, ND, 3)
     tabv = jnp.stack([bi_k["w"], bi_k["ls"], bi_k["ss"]], axis=-1)
@@ -358,7 +395,7 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
     dsr = jnp.where(start[:, None] & fresh, 0.0, dsr)
     x_sr = r * r_opp
     x_sr = jnp.where(start[:, None], x_sr + dsr * bi_k["sr"][sid], x_sr)
-    sr = seg_linear_scan(start, dsr, x_sr, chunks=chunks, smap=smap)
+    sr = seg_linear_scan(start, dsr, x_sr, chunks=chunks, shard=shard)
 
     # --- bidirectional stats, emitted at the requested rows only ---
     def emit(rows):
@@ -402,7 +439,7 @@ def channel_pass(bi_k, slots, dirs, ts, lens, own_atoms, n_slots,
 
 
 def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None,
-                 chunks: int = 1, smap=None):
+                 chunks: int = 1, shard=None):
     """Full bidirectional update for ONE bi key type with ONE argsort.
 
     tabs: the per-key slices of ``state["bi"]`` (last_t/w/ls/ss
@@ -426,13 +463,13 @@ def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None,
            for f in ("last_t", "w", "ls", "ss")}
     atoms, new_tab = stream_pass(tab, slots * 2 + dirs, ts, lens,
                                  2 * n_slots, order=order_dir,
-                                 chunks=chunks, smap=smap)
+                                 chunks=chunks, shard=shard)
     # stale-opposite fallback must be the PRE-batch table values
     bi_k_pre = {f: tabs[f] for f in
                 ("sr", "sr_last_t", "res_last", "w", "ls", "ss")}
     fts, upd = channel_pass(bi_k_pre, slots, dirs, ts, lens, atoms, n_slots,
                             order=order, dir_gather=dir_gather,
-                            sample=sample, chunks=chunks, smap=smap)
+                            sample=sample, chunks=chunks, shard=shard)
     new_tabs = {f: new_tab[f].reshape(n_slots, 2, N_DECAY)
                 for f in ("last_t", "w", "ls", "ss")}
     new_tabs.update({f: upd[f] for f in ("sr", "sr_last_t", "res_last")})
@@ -441,7 +478,7 @@ def _bi_key_pass(tabs, slots, dirs, ts, lens, n_slots, sample=None,
 
 def _process_parallel_impl(state: Dict, pkts: Dict[str, jax.Array],
                            sample_idx=None, chunks: int = 1,
-                           smap=None) -> Tuple[Dict, jax.Array]:
+                           shard=None) -> Tuple[Dict, jax.Array]:
     from repro.core.state import state_slots
     n_slots = state_slots(state)
     sl = packet_slots(pkts, n_slots)
@@ -471,7 +508,7 @@ def _process_parallel_impl(state: Dict, pkts: Dict[str, jax.Array],
     atoms, new_uni_tab = jax.vmap(
         lambda tab, ids: stream_pass(tab, ids, ts, lens, n_slots,
                                      sample=sample_idx, chunks=chunks,
-                                     smap=smap)
+                                     shard=shard)
     )(uni_tab, uni_ids)
     mu, _, sig = _stats(atoms["w"], atoms["ls"], atoms["ss"])
     uni_feats = jnp.stack([atoms["w"], mu, sig], axis=-1)    # (2, n|m, ND, 3)
@@ -483,7 +520,7 @@ def _process_parallel_impl(state: Dict, pkts: Dict[str, jax.Array],
     bi_feats, new_bi_tabs = jax.vmap(
         lambda tabs, s: _bi_key_pass(tabs, s, sl["dir"], ts, lens, n_slots,
                                      sample=sample_idx, chunks=chunks,
-                                     smap=smap)
+                                     shard=shard)
     )(bi_tabs, bi_slots)                                     # (2, n|m, ND, 7)
 
     out = jnp.concatenate([
@@ -512,7 +549,7 @@ def process_parallel_sampled(state: Dict, pkts: Dict[str, jax.Array],
 
 
 process_parallel = jax.jit(_process_parallel_impl,
-                           static_argnames=("chunks", "smap"))
+                           static_argnames=("chunks", "shard"))
 process_parallel.__doc__ = (
     "Exact-mode Peregrine FC via segmented scans. Same I/O as "
     "``process_serial(..., mode='exact')``.")

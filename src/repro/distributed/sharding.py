@@ -34,6 +34,9 @@ PRODUCTION_RULES: Dict[str, Axis] = {
     # Peregrine flow-table partitions (core/sharded.py): the shard axis of
     # the hash-partitioned flow state spreads over the DP axes
     "flow_shards": ("pod", "data"),
+    # Peregrine multi-tenant engine (serving/engine.py): the tenant lanes of
+    # the tenant-batched fused step spread over the DP axes
+    "tenants": ("pod", "data"),
 }
 
 
@@ -75,17 +78,104 @@ def ambient_mesh():
     return None
 
 
+def _rule_binding(name: str):
+    rules = current_rules()
+    binding = rules.rules.get(name) if rules is not None else None
+    if isinstance(binding, list):
+        binding = tuple(binding)
+    return binding
+
+
 def flow_shards_binding():
     """The normalised ``flow_shards`` rule of the ambient axis rules, or
     ``None`` when unbound.  Shared by everything that keys compiled
     executables on the flow-table placement (``core/bucketed.py``'s
     trace-time resolution and ``serving/fused.py``'s step-cache key), so
     the two can never drift apart."""
-    rules = current_rules()
-    binding = rules.rules.get("flow_shards") if rules is not None else None
-    if isinstance(binding, list):
-        binding = tuple(binding)
-    return binding
+    return _rule_binding("flow_shards")
+
+
+def tenant_binding():
+    """The normalised ``tenants`` rule — the mesh axis (or axes) the
+    multi-tenant engine's lane dimension spreads over — or ``None`` when
+    unbound.  Consumed by ``serving/fused.make_tenant_step`` both for the
+    lane sharding constraint and for its step-cache key."""
+    return _rule_binding("tenants")
+
+
+class ShardContext:
+    """Resolved mesh placement for the two-level bucketed scans.
+
+    ``core/parallel.py``'s segmented-scan helpers take one of these (built
+    by ``core/bucketed.py`` from the ambient mesh + ``flow_shards`` rule)
+    and keep EVERY O(n) step of the chunked scan shard-local: the local
+    per-chunk scans, the carry fix-up, and the where-selects all run inside
+    one ``shard_map`` region whose only collective is ``gather_tails`` —
+    an all-gather of the O(S) per-chunk tail summaries (a few KB), never a
+    full-batch transfer.
+
+    Instances are built once per (mesh, binding, device count) and cached
+    (``core/bucketed._shard_ctx``) so they are stable jit-cache keys.
+    """
+
+    def __init__(self, mesh, binding):
+        self.mesh = mesh
+        self.binding = binding
+        self.axes: Tuple[str, ...] = (binding if isinstance(binding, tuple)
+                                      else (binding,))
+        size = 1
+        for a in self.axes:
+            size *= mesh.shape[a]
+        self.size = size
+
+    def wrap(self, fn):
+        """Run ``fn`` under ``shard_map`` with every input/output's leading
+        (chunk) axis split over the bound mesh axes."""
+        try:
+            from jax.experimental.shard_map import shard_map
+        except ImportError:  # pragma: no cover - jax >= 0.6 spelling
+            from jax import shard_map
+        spec = P(self.binding)
+        return shard_map(fn, mesh=self.mesh, in_specs=spec, out_specs=spec,
+                         check_rep=False)
+
+    def gather_tails(self, t: jax.Array) -> jax.Array:
+        """All-gather per-chunk tail summaries across shards: local
+        ``(chunks/size, ...)`` -> global ``(chunks, ...)``.  The one
+        collective the bucketed scans pay — O(S) elements, not O(n)."""
+        return jax.lax.all_gather(t, self.axes, axis=0, tiled=True)
+
+    def local_chunks(self, x: jax.Array, n_local: int) -> jax.Array:
+        """Slice a combined ``(chunks, ...)`` array down to this shard's
+        ``n_local`` chunks (the inverse of :meth:`gather_tails`)."""
+        idx = 0
+        for a in self.axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return jax.lax.dynamic_slice_in_dim(x, idx * n_local, n_local, 0)
+
+
+@contextlib.contextmanager
+def flow_mesh(n_devices: Optional[int] = None, axis: str = "data",
+              rules: Optional[Dict[str, Axis]] = None):
+    """Bind an N-device mesh with the Peregrine placement rules in one shot.
+
+    Builds a 1-D mesh of ``n_devices`` (default: every visible device) on
+    logical axis ``axis``, sets it ambient, and binds
+    ``{"flow_shards": axis, "tenants": axis}`` (override with ``rules``) —
+    the two rules the bucketed FC engine and the multi-tenant engine place
+    themselves by.  The forced-host-device harness
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``; DESIGN.md §12)
+    plus this context manager is the whole multi-device story on CPU CI;
+    on a real accelerator mesh the same call binds physical devices.
+    """
+    n = jax.device_count() if n_devices is None else int(n_devices)
+    mesh = jax.make_mesh((n,), (axis,))
+    with contextlib.ExitStack() as es:
+        es.enter_context(set_mesh(mesh))
+        es.enter_context(use_rules(
+            {"flow_shards": axis, "tenants": axis} if rules is None
+            else rules))
+        yield mesh
 
 
 def named_shardings(mesh, tree):

@@ -50,7 +50,8 @@ import jax.numpy as jnp
 from repro.core.backends import compute_features_sampled, resolve_backend
 from repro.core.records import epoch_gather
 from repro.detection.md_backends import md_score_fn
-from repro.distributed.sharding import ambient_mesh, flow_shards_binding
+from repro.distributed.sharding import (ambient_mesh, flow_shards_binding,
+                                        tenant_binding)
 
 
 def _freeze(kw: Dict) -> Tuple:
@@ -58,17 +59,37 @@ def _freeze(kw: Dict) -> Tuple:
 
 
 def _placement_token():
-    """Ambient flow-table placement (mesh + ``flow_shards`` rule).
+    """Ambient placement (mesh + ``flow_shards``/``tenants`` rules +
+    device count).
 
     Part of the fused-step cache key: the partitioned FC backends
     (``bucketed``/``sharded``) resolve their mesh placement at trace time,
     so binding or unbinding a mesh must hand back a *different* step —
     otherwise the cached executable silently keeps the placement it was
     first traced under (the exact hazard ``core/bucketed.py`` resolves
-    outside jit to avoid).  Shares the binding lookup with that resolver
-    (``distributed/sharding.flow_shards_binding``) so key and trace can
+    outside jit to avoid).  Shares the binding lookups with that resolver
+    (``distributed/sharding``) so key and trace can never disagree.  The
+    device count is in the token explicitly so a mesh re-bound under a
+    different forced-device topology can never be served a stale step."""
+    return (flow_shards_binding(), tenant_binding(), ambient_mesh(),
+            jax.device_count())
+
+
+def _tenant_sharding(placement: Tuple):
+    """``NamedSharding`` spreading the tenant (leading) axis of the
+    tenant-batched step over the ambient ``tenants`` rule, or ``None``
+    when unplaced (no mesh, no rule, or the rule names axes the mesh
+    lacks).  Resolved from the placement token at step-build time — the
+    same values that key the cache — so the constraint and the cache can
     never disagree."""
-    return flow_shards_binding(), ambient_mesh()
+    _, tenants, mesh, _ = placement
+    if mesh is None or tenants is None:
+        return None
+    axes = tenants if isinstance(tenants, tuple) else (tenants,)
+    if not all(a in mesh.axis_names for a in axes):
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P(tenants))
 
 
 def _make_core(backend: str, mode: str, backend_kw: Tuple,
@@ -99,7 +120,7 @@ def _make_core(backend: str, mode: str, backend_kw: Tuple,
 @functools.lru_cache(maxsize=None)
 def _cached_step(backend: str, mode: str, backend_kw: Tuple,
                  md_backend: str, md_kw: Tuple, epoch: int,
-                 placement: Tuple = (None, None)) -> Callable:
+                 placement: Tuple = (None, None, None, 1)) -> Callable:
     step = _make_core(backend, mode, backend_kw, md_backend, md_kw, epoch)
     return jax.jit(step, donate_argnums=(0,))
 
@@ -107,14 +128,28 @@ def _cached_step(backend: str, mode: str, backend_kw: Tuple,
 @functools.lru_cache(maxsize=None)
 def _cached_tenant_step(backend: str, mode: str, backend_kw: Tuple,
                         md_backend: str, md_kw: Tuple, epoch: int,
-                        placement: Tuple = (None, None)) -> Callable:
+                        placement: Tuple = (None, None, None, 1)) -> Callable:
     core = _make_core(backend, mode, backend_kw, md_backend, md_kw, epoch)
     # net and threshold are shared across tenants (one fitted detector,
     # many streams); state / epoch residue / packets carry the tenant axis
     vcore = jax.vmap(core, in_axes=(0, None, None, 0, 0))
+    lane_sharding = _tenant_sharding(placement)
+
+    def constrain(tree):
+        # spread the tenant (leading) axis over the ``tenants`` mesh rule:
+        # each device advances its lanes' FC scans + KitNET independently
+        # (lanes share nothing but net/threshold, which XLA replicates).
+        # A lane count that does not divide the axis still compiles — XLA
+        # pads the partition — so ragged final batches stay placed.
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, lane_sharding),
+            tree)
 
     def step(pool, tenant_ids, net, threshold, base_mods, pkts):
         sub = jax.tree_util.tree_map(lambda x: x[tenant_ids], pool)
+        if lane_sharding is not None:
+            sub, base_mods, pkts = (constrain(sub), constrain(base_mods),
+                                    constrain(pkts))
         sub, idx, scores, alarms, counts = vcore(sub, net, threshold,
                                                  base_mods, pkts)
         pool = jax.tree_util.tree_map(
@@ -167,6 +202,13 @@ def make_tenant_step(backend: str = "scan", mode: str = "exact",
     tests/test_engine.py pins it), and scattered back inside the same jit,
     so states and epoch counters cannot mix.  ``net``/``threshold`` are
     shared: one fitted detector serving many streams.
+
+    When a mesh is bound and the ``tenants`` logical axis has a rule
+    (e.g. under ``distributed.sharding.flow_mesh``), the tenant axis of
+    the gathered lanes is sharded over that rule — tenant lanes advance
+    device-parallel, the engine's first mesh placement (DESIGN.md §12).
+    The placement participates in the step cache key exactly like the
+    flow-table placement.
 
     **Donation contract (DESIGN.md §8, unchanged):** ``pool`` is donated —
     continue from the returned pool only; ``tenant_ids`` must not repeat a

@@ -1,0 +1,188 @@
+"""Multi-device mesh suite (DESIGN.md §12).
+
+Forced-device topology (``--xla_force_host_platform_device_count``) is
+fixed at jax backend init, so the N∈{2,4} checks run in SUBPROCESSES via
+``tests/mesh_check.py`` — one process per device count, each running the
+full battery set (bucketed parity across every attack generator, fused
+stream continuity, sketch state, engine tenant placement, ambient
+resolution) and printing one ``MESH-OK <battery>`` marker per pass.  The
+parametrized tests here assert the markers individually so a single
+battery failure is attributed, not smeared across the suite.
+
+Everything that does NOT need a multi-device topology runs in-process:
+the seeded non-Hypothesis twins of the cross-bucket combine properties
+(tests/test_properties.py needs ``hypothesis``, which not every host
+has), the placement-cache device-count keys, and the ``benchmarks.common``
+mesh-row save guard.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arith
+from repro.core.parallel import seg_last_scan, seg_linear_scan
+
+TESTS = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(TESTS)
+CHECK = os.path.join(TESTS, "mesh_check.py")
+BATTERIES = ("ambient", "parity", "fused", "sketch", "engine")
+DEVICE_COUNTS = (2, 4)
+
+_RUNS = {}
+
+
+def _mesh_run(n_devices: int):
+    """One subprocess per device count, shared by every battery test (the
+    worker prints all markers in one run — compile once, assert many)."""
+    if n_devices not in _RUNS:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        _RUNS[n_devices] = subprocess.run(
+            [sys.executable, CHECK, str(n_devices)],
+            capture_output=True, text=True, timeout=1800, env=env,
+            cwd=ROOT)
+    return _RUNS[n_devices]
+
+
+@pytest.mark.parametrize("n_devices", DEVICE_COUNTS)
+@pytest.mark.parametrize("battery", BATTERIES)
+def test_forced_mesh_battery(n_devices, battery):
+    p = _mesh_run(n_devices)
+    marker = f"MESH-OK {battery}"
+    assert marker in p.stdout, (
+        f"{marker} missing from mesh_check.py {n_devices} "
+        f"(exit {p.returncode})\n--- stdout ---\n{p.stdout[-2000:]}"
+        f"\n--- stderr ---\n{p.stderr[-4000:]}")
+
+
+@pytest.mark.parametrize("n_devices", DEVICE_COUNTS)
+def test_forced_mesh_run_clean(n_devices):
+    p = _mesh_run(n_devices)
+    assert p.returncode == 0 and "MESH-DONE" in p.stdout, (
+        p.stdout[-2000:], p.stderr[-4000:])
+
+
+# ---------------------------------------------------------------------------
+# seeded non-Hypothesis twins of the cross-bucket combine properties
+# (same invariants as tests/test_properties.py, runnable without hypothesis)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("chunks", (2, 4, 8))
+def test_seg_scans_ragged_sentinel_tail_prefix_invariant_seeded(chunks,
+                                                                seed):
+    """Sentinel-padded ragged tails (core/bucketed.py's padding shape)
+    must leave the real-row prefix of both chunked scans exactly the
+    unpadded flat scan's."""
+    rng = np.random.default_rng(1000 * chunks + seed)
+    n = int(rng.integers(2, 41))
+    seg = np.sort(rng.integers(0, int(rng.integers(1, 6)), n))
+    start = np.r_[True, seg[1:] != seg[:-1]]
+    delta = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    x = rng.uniform(-2, 2, n).astype(np.float32)
+    valid = rng.random(n) < 0.5
+    pad = (-n) % chunks
+    startp = np.r_[start, np.ones(pad, bool)]
+    deltap = np.r_[delta, np.zeros(pad, np.float32)]
+    xp = np.r_[x, np.zeros(pad, np.float32)]
+    validp = np.r_[valid, np.zeros(pad, bool)]
+
+    flat = np.asarray(seg_linear_scan(jnp.asarray(start), jnp.asarray(delta),
+                                      jnp.asarray(x)))
+    got = np.asarray(seg_linear_scan(jnp.asarray(startp),
+                                     jnp.asarray(deltap),
+                                     jnp.asarray(xp), chunks=chunks))[:n]
+    np.testing.assert_allclose(got, flat, rtol=2e-4, atol=1e-4)
+
+    f_flat, v_flat = seg_last_scan(jnp.asarray(start), jnp.asarray(valid),
+                                   jnp.asarray(x))
+    f_ch, v_ch = seg_last_scan(jnp.asarray(startp), jnp.asarray(validp),
+                               jnp.asarray(xp), chunks=chunks)
+    f_flat = np.asarray(f_flat)
+    np.testing.assert_array_equal(np.asarray(f_ch)[:n], f_flat)
+    np.testing.assert_array_equal(np.asarray(v_ch)[:n][f_flat],
+                                  np.asarray(v_flat)[f_flat])
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("chunks", (2, 4))
+def test_invert_perm_shard_crossing_scatter_seeded(chunks, seed):
+    """Sort-by-key → chunked scan → scatter back through one shared
+    ``invert_perm``: segments crossing chunk cuts come back in original
+    order with the flat scan's values."""
+    rng = np.random.default_rng(2000 * chunks + seed)
+    n = int(rng.integers(4, 65))
+    if n % chunks:
+        n += chunks - n % chunks
+    keys = rng.integers(0, int(rng.integers(1, 5)), n)
+    order = np.argsort(keys, kind="stable")
+    inv = np.asarray(arith.invert_perm(jnp.asarray(order)))
+    x = rng.uniform(-2, 2, n).astype(np.float32)
+    np.testing.assert_array_equal(x[order][inv], x)
+    sk = keys[order]
+    startk = np.r_[True, sk[1:] != sk[:-1]]
+    delta = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    args = (jnp.asarray(startk), jnp.asarray(delta[order]),
+            jnp.asarray(x[order]))
+    flat = np.asarray(seg_linear_scan(*args))[inv]
+    ch = np.asarray(seg_linear_scan(*args, chunks=chunks))[inv]
+    np.testing.assert_allclose(ch, flat, rtol=2e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# placement cache keys include the device count
+# ---------------------------------------------------------------------------
+def test_shard_ctx_cache_keys_on_device_count():
+    """A re-bound mesh under a different forced-device topology must
+    never be served a stale compiled step: the ShardContext and the jitted
+    bucketed runner are cached per device count on top of the mesh/rule."""
+    from repro.core.bucketed import _bucketed_jit, _shard_ctx
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    c1 = _shard_ctx(mesh, "data", 1)
+    c2 = _shard_ctx(mesh, "data", 2)
+    assert c1 is not c2
+    assert _shard_ctx(mesh, "data", 1) is c1
+    assert _shard_ctx(None, "data", 1) is None
+    assert _bucketed_jit(4, None, 1) is not _bucketed_jit(4, None, 2)
+    assert _bucketed_jit(4, None, 1) is _bucketed_jit(4, None, 1)
+
+
+def test_fused_placement_token_includes_device_count():
+    from repro.serving.fused import _placement_token
+
+    tok = _placement_token()
+    assert tok[-1] == jax.device_count()
+    assert len(tok) == 4          # flow_shards, tenants, mesh, device count
+
+
+# ---------------------------------------------------------------------------
+# benchmark mesh rows refuse a mismatched forced-device environment
+# ---------------------------------------------------------------------------
+def test_mesh_bench_rows_refuse_device_mismatch(tmp_path, monkeypatch):
+    """``benchmarks.common.save`` must reject a ``_mesh<D>_`` row whose D
+    exceeds the device count stamped into the payload's env — committed
+    BENCH files can never mix 1- and N-device numbers."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks import common
+    finally:
+        sys.path.remove(ROOT)
+    monkeypatch.setattr(common, "RESULTS", str(tmp_path / "results"))
+    monkeypatch.setattr(common, "ROOT", str(tmp_path))
+    ndev = jax.device_count()
+    with pytest.raises(ValueError, match="mesh row"):
+        common.save("throughput_test",
+                    {f"bucketed8_mesh{ndev + 1}_pps": 1.0})
+    # rows within the stamped topology save fine (incl. the D=1 baseline)
+    fn = common.save("throughput_test",
+                     {f"bucketed8_mesh{ndev}_pps": 1.0,
+                      "bucketed8_mesh1_pps": 1.0,
+                      "scan_pps": 1.0})
+    assert os.path.exists(fn)

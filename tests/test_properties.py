@@ -110,6 +110,76 @@ def test_seg_last_scan_matches_serial(n, n_segs, seed):
 
 
 # ---------------------------------------------------------------------------
+# O(S) cross-bucket combine: ragged sentinel tails + shard-crossing perms
+# (tests/test_mesh.py carries seeded non-Hypothesis twins of these, so the
+# invariants stay exercised on hosts without hypothesis installed)
+# ---------------------------------------------------------------------------
+@settings(**SETT)
+@given(st.integers(2, 40), st.integers(1, 5), st.sampled_from([2, 4, 8]),
+       st.integers(0, 10 ** 6))
+def test_seg_scans_ragged_sentinel_tail_prefix_invariant(n, n_segs, chunks,
+                                                         seed):
+    """The bucketed pipeline pads ragged batches to a chunk multiple with
+    sentinel rows that open their own dead segment at the tail
+    (core/bucketed.py); the real-row PREFIX of both chunked scans must be
+    exactly what the unpadded flat scan computes — padding may never leak
+    backwards across the cut."""
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, n_segs, n))
+    start = np.r_[True, seg[1:] != seg[:-1]]
+    delta = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    x = rng.uniform(-2, 2, n).astype(np.float32)
+    valid = rng.random(n) < 0.5
+    pad = (-n) % chunks
+    startp = np.r_[start, np.ones(pad, bool)]     # sentinels: own segments
+    deltap = np.r_[delta, np.zeros(pad, np.float32)]
+    xp = np.r_[x, np.zeros(pad, np.float32)]
+    validp = np.r_[valid, np.zeros(pad, bool)]
+
+    flat = np.asarray(seg_linear_scan(jnp.asarray(start), jnp.asarray(delta),
+                                      jnp.asarray(x)))
+    got = np.asarray(seg_linear_scan(jnp.asarray(startp), jnp.asarray(deltap),
+                                     jnp.asarray(xp), chunks=chunks))[:n]
+    np.testing.assert_allclose(got, flat, rtol=2e-4, atol=1e-4)
+
+    f_flat, v_flat = seg_last_scan(jnp.asarray(start), jnp.asarray(valid),
+                                   jnp.asarray(x))
+    f_ch, v_ch = seg_last_scan(jnp.asarray(startp), jnp.asarray(validp),
+                               jnp.asarray(xp), chunks=chunks)
+    f_flat = np.asarray(f_flat)
+    np.testing.assert_array_equal(np.asarray(f_ch)[:n], f_flat)
+    np.testing.assert_array_equal(np.asarray(v_ch)[:n][f_flat],
+                                  np.asarray(v_flat)[f_flat])
+
+
+@settings(**SETT)
+@given(st.integers(4, 64), st.integers(1, 4), st.sampled_from([2, 4]),
+       st.integers(0, 10 ** 6))
+def test_invert_perm_shard_crossing_scatter(n, n_keys, chunks, seed):
+    """The bucketed backend sorts by flow key, scans chunked, and scatters
+    back through ONE shared ``invert_perm`` — segments whose packets land
+    in different chunks (shard-boundary crossers, near-certain with this
+    few keys) must come back in original order carrying the same values as
+    the flat sorted scan."""
+    if n % chunks:
+        n += chunks - n % chunks
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys, n)
+    order = np.argsort(keys, kind="stable")
+    inv = np.asarray(arith.invert_perm(jnp.asarray(order)))
+    x = rng.uniform(-2, 2, n).astype(np.float32)
+    np.testing.assert_array_equal(x[order][inv], x)   # exact round-trip
+    sk = keys[order]
+    startk = np.r_[True, sk[1:] != sk[:-1]]
+    delta = rng.uniform(0.1, 1.0, n).astype(np.float32)
+    args = (jnp.asarray(startk), jnp.asarray(delta[order]),
+            jnp.asarray(x[order]))
+    flat = np.asarray(seg_linear_scan(*args))[inv]
+    ch = np.asarray(seg_linear_scan(*args, chunks=chunks))[inv]
+    np.testing.assert_allclose(ch, flat, rtol=2e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # approximate arithmetic bounds
 # ---------------------------------------------------------------------------
 @settings(**SETT)
